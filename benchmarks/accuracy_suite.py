@@ -1,0 +1,64 @@
+"""Paper Fig. 4 (convergence), Fig. 6 (crossbar sweep), Table I (f() zoo).
+
+Reduced-model, synthetic-data reproduction of the paper's accuracy claims
+(see common.py docstring for the scaling rationale). We report the same
+QUANTITY the paper does: accuracy DELTA of CADC vs the vConv baseline
+trained identically — the paper's claim is that the delta stays within
+~±1.6% across crossbar sizes and that ReLU wins for ANNs / sublinear for
+the SNN (Table I).
+"""
+from __future__ import annotations
+
+from repro.models.common import LayerMode
+
+from benchmarks import common as C
+
+FNS = ("relu", "sublinear", "supralinear", "tanh")
+
+
+def run(models=None, *, fns=FNS, xbars=C.XBAR_SWEEP) -> C.Emitter:
+    em = C.Emitter("accuracy_suite")
+    models = models or list(C.MODELS)
+
+    for mid in models:
+        # vConv baseline: exact matmul regardless of crossbar size -> train once.
+        base = C.train_cached(mid, LayerMode(impl="vconv",
+                                             crossbar_size=C.XBAR_DEFAULT))
+        em.emit(table="baseline", model=mid,
+                dataset=C.PAPER_DATASET[mid], impl="vconv",
+                acc=base["eval"]["acc"], loss=base["eval"]["loss"],
+                train_s=base["train_s"])
+
+        # Table I: f() zoo at the default crossbar size.
+        for fn in fns:
+            r = C.train_cached(
+                mid, LayerMode(impl="cadc", crossbar_size=C.XBAR_DEFAULT, fn=fn)
+            )
+            em.emit(table="table1", model=mid, impl="cadc", fn=fn,
+                    xbar=C.XBAR_DEFAULT, acc=r["eval"]["acc"],
+                    delta_vs_vconv=r["eval"]["acc"] - base["eval"]["acc"],
+                    train_s=r["train_s"])
+
+        # Fig. 6: crossbar-size sweep with the model family's best f().
+        best = C.MODELS[mid].best_fn
+        for xb in xbars:
+            r = C.train_cached(mid, LayerMode(impl="cadc", crossbar_size=xb,
+                                              fn=best))
+            em.emit(table="fig6", model=mid, impl="cadc", fn=best, xbar=xb,
+                    acc=r["eval"]["acc"],
+                    delta_vs_vconv=r["eval"]["acc"] - base["eval"]["acc"])
+
+        # Fig. 4: convergence history (CADC best-f vs vConv).
+        r = C.train_cached(
+            mid, LayerMode(impl="cadc", crossbar_size=C.XBAR_DEFAULT, fn=best)
+        )
+        for h_base, h_cadc in zip(base["history"], r["history"]):
+            em.emit(table="fig4", model=mid, step=h_base["step"],
+                    vconv_acc=h_base["acc"], cadc_acc=h_cadc["acc"])
+
+    em.save()
+    return em
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,236 @@
+"""Shared benchmark infrastructure.
+
+Every benchmark module reproduces one paper table/figure (DESIGN.md §8) and
+emits rows through `emit()` (CSV on stdout + JSON under experiments/bench/).
+
+Paper-scale note (EXPERIMENTS.md §Paper): the container is offline + 1 CPU
+core, so the four CNN benchmarks run REDUCED widths on synthetic datasets.
+Reduced dims are 4-8x smaller than the paper's, so the crossbar sweep uses
+{32, 64, 128} instead of {64, 128, 256}: this keeps S = ceil(D/N) — the
+number of psum segments, which is what CADC actually acts on — inside the
+paper's regime (2..9 segments) instead of degenerating to S=1.
+
+Trained models are cached under experiments/bench/cache/ keyed by
+(model, impl, crossbar, fn, steps); downstream benchmarks (sparsity, ADC
+noise, system eval) reuse the accuracy suite's trained weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core.quant import FP32, QuantConfig
+from repro.data import synthetic
+from repro.models.cnn import lenet5, resnet18, snn, vgg16
+from repro.models.common import Ctx, LayerMode
+from repro.train import loop as train_loop
+from repro.train import optimizer as opt_lib
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_DIR = os.path.join(ROOT, "experiments", "bench")
+CACHE_DIR = os.path.join(BENCH_DIR, "cache")
+
+# Reduced-model crossbar sweep (see module docstring). Paper: {64, 128, 256}.
+XBAR_SWEEP = (32, 64, 128)
+XBAR_DEFAULT = 64  # paper's Table I operating point
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))  # CI-speed switch
+
+
+# ---------------------------------------------------------------------------
+# model registry: the paper's four benchmarks, reduced for 1-core CPU
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    init_fn: Callable
+    apply_fn: Callable
+    init_kwargs: Dict[str, Any]
+    batch_fn: Callable          # (step, bs) -> batch
+    input_key: str
+    steps: int
+    batch_size: int
+    lr: float = 1e-3
+    # f() the paper found best for this model family (Table I)
+    best_fn: str = "relu"
+
+
+def _registry() -> Dict[str, ModelSpec]:
+    cls10 = synthetic.make_classification_dataset(
+        synthetic.ClassificationSpec(n_classes=10, hw=28, channels=1, noise=0.8)
+    )
+    cls10c = synthetic.make_classification_dataset(
+        synthetic.ClassificationSpec(n_classes=10, hw=32, channels=3, noise=0.9,
+                                     seed=1)
+    )
+    cls100 = synthetic.make_classification_dataset(
+        synthetic.ClassificationSpec(n_classes=20, hw=32, channels=3, noise=0.9,
+                                     seed=2)
+    )
+    events = synthetic.make_event_dataset(n_classes=11, hw=16, t_steps=6, seed=3)
+
+    def ev_batch(step, bs):
+        b = events(step, bs)
+        return {"image": b["events"], "label": b["label"]}
+
+    steps = 40 if FAST else 240
+    return {
+        "lenet5": ModelSpec(
+            "lenet5", lenet5.init, lenet5.apply, {}, cls10, "image",
+            steps=steps, batch_size=64,
+        ),
+        "resnet18": ModelSpec(
+            "resnet18", resnet18.init, resnet18.apply,
+            {"num_classes": 10, "width": 16}, cls10c, "image",
+            steps=steps, batch_size=32,
+        ),
+        "vgg16": ModelSpec(
+            "vgg16", vgg16.init, vgg16.apply,
+            {"num_classes": 20, "width_div": 8}, cls100, "image",
+            steps=steps, batch_size=32,
+        ),
+        "snn": ModelSpec(
+            "snn", snn.init, snn.apply,
+            {"num_classes": 11, "width": 8, "hw": 16}, ev_batch, "image",
+            steps=steps, batch_size=32, best_fn="sublinear",
+        ),
+    }
+
+
+MODELS = _registry()
+PAPER_DATASET = {  # what the reduced run proxies
+    "lenet5": "MNIST", "resnet18": "CIFAR-10", "vgg16": "CIFAR-100",
+    "snn": "DVS Gesture",
+}
+
+
+# ---------------------------------------------------------------------------
+# train-with-cache
+# ---------------------------------------------------------------------------
+
+def mode_key(mode: LayerMode) -> str:
+    if mode.impl == "vconv":
+        return f"vconv_x{mode.crossbar_size}"
+    return f"cadc_x{mode.crossbar_size}_{mode.fn}"
+
+
+def train_cached(model_id: str, mode: LayerMode,
+                 *, force: bool = False) -> Dict[str, Any]:
+    """Train (or load cached) model under `mode`; returns
+    {'params','state','history','eval','train_s'}."""
+    spec = MODELS[model_id]
+    key = f"{model_id}__{mode_key(mode)}__s{spec.steps}"
+    cdir = os.path.join(CACHE_DIR, key)
+    meta_fn = os.path.join(cdir, "meta.json")
+
+    if not force and os.path.exists(meta_fn):
+        with open(meta_fn) as f:
+            meta = json.load(f)
+        kp, ms = spec.init_fn(jax.random.PRNGKey(0), **spec.init_kwargs)
+        _, tree = ckpt.restore(cdir, {"params": kp, "model_state": ms})
+        return {**meta, "params": tree["params"], "state": tree["model_state"]}
+
+    t0 = time.time()
+    out = train_loop.train(
+        init_fn=spec.init_fn,
+        apply_fn=spec.apply_fn,
+        batch_fn=spec.batch_fn,
+        mode=mode,
+        optimizer=opt_lib.adamw(spec.lr),
+        cfg=train_loop.TrainConfig(
+            steps=spec.steps, batch_size=spec.batch_size,
+            eval_every=max(1, spec.steps // 8), eval_batches=8,
+        ),
+        input_key=spec.input_key,
+        init_kwargs=spec.init_kwargs,
+    )
+    train_s = time.time() - t0
+    os.makedirs(cdir, exist_ok=True)
+    ckpt.save(cdir, spec.steps,
+              {"params": out["params"], "model_state": out["state"]}, keep_k=1)
+    meta = {"history": out["history"], "eval": out["eval"],
+            "train_s": round(train_s, 1)}
+    with open(meta_fn, "w") as f:
+        json.dump(meta, f)
+    return {**meta, "params": out["params"], "state": out["state"]}
+
+
+def eval_under(model_id: str, trained: Dict[str, Any], mode: LayerMode,
+               *, rng: Optional[jax.Array] = None,
+               n_batches: int = 8) -> Dict[str, float]:
+    """Evaluate trained params under a (possibly different) LayerMode — used
+    for ADC-noise injection at test time (paper Fig. 9 protocol)."""
+    spec = MODELS[model_id]
+    return train_loop.evaluate(
+        spec.apply_fn, trained["params"], trained["state"], spec.batch_fn,
+        mode, n_batches=n_batches, batch_size=spec.batch_size,
+        input_key=spec.input_key, rng=rng,
+    )
+
+
+def collect_psum_stats(model_id: str, trained: Dict[str, Any],
+                       mode: LayerMode, *, n_batches: int = 2) -> Dict[str, Dict[str, float]]:
+    """Forward passes with stats collection; returns {layer: {sparsity,
+    count, segments}} averaged over batches."""
+    spec = MODELS[model_id]
+    smode = dataclasses.replace(mode, collect_stats=True)
+    acc: Dict[str, Dict[str, List[float]]] = {}
+    for i in range(n_batches):
+        batch = spec.batch_fn(10_000 + i, spec.batch_size)
+        ctx = Ctx(smode)
+        spec.apply_fn(trained["params"], trained["state"],
+                      batch[spec.input_key], ctx, train=False)
+        for name, st in ctx.stats_dict().items():
+            d = acc.setdefault(name, {"sparsity": [], "count": [],
+                                      "segments": []})
+            for k in d:
+                d[k].append(float(st[k]))
+    return {
+        name: {k: float(np.mean(v)) for k, v in d.items()}
+        for name, d in acc.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# result emission
+# ---------------------------------------------------------------------------
+
+class Emitter:
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[Dict[str, Any]] = []
+
+    def emit(self, **row):
+        self.rows.append(row)
+        vals = ",".join(f"{k}={_fmt(v)}" for k, v in row.items())
+        print(f"{self.bench},{vals}")
+
+    def save(self):
+        os.makedirs(BENCH_DIR, exist_ok=True)
+        fn = os.path.join(BENCH_DIR, f"{self.bench}.json")
+        with open(fn, "w") as f:
+            json.dump(self.rows, f, indent=2, default=_json_default)
+        return fn
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _json_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, (jnp.ndarray, np.ndarray)):
+        return np.asarray(o).tolist()
+    raise TypeError(f"not serializable: {type(o)}")

@@ -1,0 +1,78 @@
+"""Kernel-level benchmark: CADC segmented matmul.
+
+CPU container => no TPU wall-clocks for the Pallas kernel itself; we report
+(a) correctness of the Pallas kernel (interpret mode) vs the jnp oracle,
+(b) XLA-path timing of cadc vs vconv vs plain dot on CPU (the relative cost
+    of the per-segment f() epilogue), and
+(c) the kernel's analytic VMEM working set + arithmetic intensity per
+    BlockSpec configuration — the quantities that size the TPU mapping.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.cadc_matmul import cadc_matmul_pallas
+
+from benchmarks import common as C
+
+
+def _time(f, *args, iters: int = 20) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> C.Emitter:
+    em = C.Emitter("kernel_bench")
+    key = jax.random.PRNGKey(0)
+    m, d, n, xbar = 512, 2048, 1024, 256
+
+    x = jax.random.normal(key, (m, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, n), jnp.float32) / 32
+
+    # (a) pallas (interpret) == oracle
+    y_ref = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn="relu")
+    y_pl = cadc_matmul_pallas(x, w, crossbar_size=xbar, fn="relu",
+                              interpret=True, block_m=128, block_n=256)
+    err = float(jnp.max(jnp.abs(y_pl - y_ref)))
+    em.emit(table="correctness", kernel="cadc_matmul_pallas", shape=f"{m}x{d}x{n}",
+            xbar=xbar, max_abs_err=err, ok=err < 1e-3)
+
+    # (b) XLA-path relative timing
+    dot = jax.jit(lambda a, b: a @ b)
+    vconv = jax.jit(lambda a, b: ops.cadc_matmul(a, b, crossbar_size=xbar,
+                                                 fn="identity"))
+    cadc = jax.jit(lambda a, b: ops.cadc_matmul(a, b, crossbar_size=xbar,
+                                                fn="relu"))
+    t_dot = _time(dot, x, w)
+    t_v = _time(vconv, x, w)
+    t_c = _time(cadc, x, w)
+    em.emit(table="xla_timing", op="plain_dot", us_per_call=t_dot)
+    em.emit(table="xla_timing", op="vconv_segmented", us_per_call=t_v,
+            overhead_vs_dot=t_v / t_dot)
+    em.emit(table="xla_timing", op="cadc_segmented", us_per_call=t_c,
+            overhead_vs_vconv=t_c / t_v)
+
+    # (c) analytic TPU mapping per BlockSpec
+    for bm, bn in ((128, 128), (256, 256), (512, 512)):
+        vmem = (bm * xbar * 2 + xbar * bn * 2 + bm * bn * 4) / 2**20  # bf16 in, f32 acc
+        flops = 2 * bm * bn * xbar
+        bytes_moved = bm * xbar * 2 + xbar * bn * 2  # acc stays resident
+        em.emit(table="blockspec", block_m=bm, block_n=bn, xbar=xbar,
+                vmem_mib=vmem, arith_intensity=flops / bytes_moved,
+                fits_vmem=vmem < 16.0)
+    em.save()
+    return em
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Render the §Roofline table (markdown/plain) from the audit JSONs.
+
+    PYTHONPATH=src python -m benchmarks.mk_table [mesh_suffix]
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def render(mesh: str = "single_audit", dry_dir: str = None) -> str:
+    dry_dir = dry_dir or os.path.join(ROOT, "experiments", "dryrun")
+    out = [f"{'arch':18s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'coll':>10s} {'dom':>11s} {'cfrac':>5s} {'useful':>6s}"]
+    for f in sorted(glob.glob(os.path.join(dry_dir, f"*__{mesh}.json"))):
+        c = json.load(open(f))
+        if c.get("status") != "OK":
+            continue
+        r = c["roofline_s"]
+        mx = max(r.values())
+        dom = max(r, key=r.get)
+        u = c["cost"].get("useful_ratio") or 0
+        out.append(
+            f"{c['arch']:18s} {c['shape']:12s} {r['compute']:10.3e} "
+            f"{r['memory']:10.3e} {r['collective']:10.3e} {dom:>11s} "
+            f"{(r['compute']/mx if mx else 0):5.2f} {u:6.3f}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "single_audit"))

@@ -1,0 +1,75 @@
+"""Paper Fig. 1(b) (psum count blowup) + Fig. 5 (per-layer psum sparsity).
+
+Fig. 1b is ANALYTIC — the psum count multiplier S = ceil(D/N) per output is
+a pure function of layer dims, so we reproduce it exactly for the paper's
+VGG-8 conv-6 example and for our four models' layers.
+
+Fig. 5 is MEASURED — per-layer post-f() psum zero-fraction on trained
+models, vConv vs CADC, via Ctx(collect_stats=True) forward passes.
+"""
+from __future__ import annotations
+
+from repro.core import sparsity as sp
+from repro.models.common import LayerMode
+
+from benchmarks import common as C
+
+
+def fig1b() -> list:
+    """Paper's example: VGG-8 conv-6 (8-bit weights), kernel 3x3x256x256 ->
+    unrolled D = 2304. Normalized psum count = S per crossbar size."""
+    rows = []
+    d = 3 * 3 * 256
+    for n in (256, 128, 64):
+        s = sp.psum_blowup(d, n)
+        rows.append({"layer": "vgg8_conv6", "D": d, "xbar": n, "psum_blowup": s})
+    return rows
+
+
+def run() -> C.Emitter:
+    em = C.Emitter("psum_sparsity")
+
+    for r in fig1b():
+        em.emit(table="fig1b", **r)
+
+    for mid in C.MODELS:
+        best = C.MODELS[mid].best_fn
+        cadc_mode = LayerMode(impl="cadc", crossbar_size=C.XBAR_DEFAULT,
+                              fn=best)
+        vconv_mode = LayerMode(impl="vconv", crossbar_size=C.XBAR_DEFAULT)
+        tr_c = C.train_cached(mid, cadc_mode)
+        tr_v = C.train_cached(mid, vconv_mode)
+
+        st_c = C.collect_psum_stats(mid, tr_c, cadc_mode)
+        st_v = C.collect_psum_stats(mid, tr_v, vconv_mode)
+
+        layers_c, layers_v = [], []
+        for name in st_c:
+            seg = st_c[name]["segments"]
+            partitioned = seg > 1
+            em.emit(table="fig5", model=mid, layer=name,
+                    segments=int(seg),
+                    cadc_sparsity=st_c[name]["sparsity"],
+                    vconv_sparsity=st_v.get(name, {}).get("sparsity", 0.0),
+                    partitioned=partitioned)
+            layers_c.append(sp.LayerPsumStats(
+                name, int(seg), int(st_c[name]["count"]),
+                st_c[name]["sparsity"], partitioned))
+            layers_v.append(sp.LayerPsumStats(
+                name, int(seg), int(st_v[name]["count"]),
+                st_v[name]["sparsity"], partitioned))
+
+        agg_c = sp.summarize(layers_c)
+        agg_v = sp.summarize(layers_v)
+        em.emit(table="fig5_summary", model=mid,
+                dataset=C.PAPER_DATASET[mid],
+                cadc_sparsity=agg_c["mean_layer_sparsity"],
+                vconv_sparsity=agg_v["mean_layer_sparsity"],
+                psums_eliminated=agg_c["eliminated_frac"],
+                total_psums=agg_c["total_psums"])
+    em.save()
+    return em
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""§Roofline (deliverable g): render the three-term roofline table from the
+dry-run artifacts in experiments/dryrun/*.json.
+
+    compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s)
+    memory     = HLO_bytes        / (chips * 819e9  B/s)
+    collective = collective_bytes / (chips * 50e9   B/s/link)
+
+The dominant term is the bottleneck; usefulness = MODEL_FLOPS / HLO_FLOPs
+(6ND train / 2ND inference; N_active for MoE) exposes remat/redundancy
+waste. Single-pod cells only (multi-pod is a compile+memory pass).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks import common as C
+
+DRYRUN_DIR = os.path.join(C.ROOT, "experiments", "dryrun")
+
+
+def load_cells(mesh: str = "single", dry_dir: str = DRYRUN_DIR) -> List[Dict]:
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dry_dir, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c: Dict) -> Optional[Dict]:
+    if c.get("status") != "OK":
+        return None
+    r = c["roofline_s"]
+    total = max(r.values())
+    # roofline fraction: how close the dominant term is to being the ONLY
+    # term — the achievable-efficiency proxy reportable without wall clocks.
+    frac = r["compute"] / total if total > 0 else 0.0
+    return {
+        "arch": c["arch"], "shape": c["shape"],
+        "compute_s": r["compute"], "memory_s": r["memory"],
+        "collective_s": r["collective"],
+        "bottleneck": c["bottleneck"],
+        "compute_frac": frac,
+        "useful_ratio": c["cost"].get("useful_ratio"),
+        "hbm_gb_per_chip": (c["memory"].get("peak_bytes") or 0) / 1e9,
+    }
+
+
+def run(mesh: str = "single_audit") -> C.Emitter:
+    em = C.Emitter(f"roofline_{mesh}")
+    for c in load_cells(mesh):
+        row = fmt_row(c)
+        if row is None:
+            em.emit(table="roofline", arch=c["arch"], shape=c["shape"],
+                    status=c.get("status"), reason=c.get("reason", ""))
+        else:
+            em.emit(table="roofline", status="OK", **row)
+    em.save()
+    return em
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "single_audit")

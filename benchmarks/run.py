@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §8).
+
+    PYTHONPATH=src python -m benchmarks.run [--only name[,name...]]
+
+Emits CSV rows to stdout and JSON under experiments/bench/. Set BENCH_FAST=1
+for CI-speed (fewer training steps).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SUITES = ("kernel_bench", "psum_sparsity", "accuracy_suite", "adc_noise",
+          "system_eval", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {SUITES}")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else list(SUITES)
+
+    failures = []
+    for name in only:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# === {name} ===")
+        try:
+            mod.run()
+            print(f"# {name}: done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"# {name}: FAILED")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

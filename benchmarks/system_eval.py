@@ -1,0 +1,73 @@
+"""Paper Fig. 10 (system energy/latency breakdown) + Table II (accelerator
+comparison).
+
+The psum-path cost model (core/costmodel.py, NeuroSim-style, calibrated to
+the paper's 65 nm synthesis) is driven by the MEASURED per-layer sparsity of
+our trained reduced models AND by the paper's reported operating point
+(ResNet-18, 54% sparsity, 4-bit ADC) so both the model's fidelity and our
+end-to-end measurement are visible.
+"""
+from __future__ import annotations
+
+from repro.core import costmodel as cm
+from repro.core import sparsity as sp
+from repro.models.common import LayerMode
+
+from benchmarks import common as C
+
+
+def paper_operating_point(em: C.Emitter):
+    """The paper's ResNet-18/CIFAR-10 point: 54% sparsity, 4b ADC."""
+    n_psums = 1e6  # normalization-invariant: reductions depend only on rho, b
+    v = cm.psum_path_cost(n_psums, 0.0, 4, compressed=False, skipped=False)
+    c = cm.psum_path_cost(n_psums, 0.54, 4, compressed=True, skipped=True)
+    rep = cm.SystemReport(vconv=v, cadc=c, mac_pj=0.0, mac_cycles=0.0)
+    red = rep.reductions()
+    em.emit(table="fig10_paper_point", sparsity=0.54, adc_bits=4,
+            buffer_transfer_reduction=red["buffer_transfer_reduction"],
+            accum_reduction=red["accum_reduction"],
+            paper_buffer_transfer=0.293, paper_accum=0.479)
+    em.emit(table="table2", name="Prop. (paper)",
+            tops=cm.system_tops(), tops_w=40.8,
+            note="model reproduces 2.15 TOPS via calibrated utilization")
+    for row in cm.TABLE_II_BASELINES:
+        lo, hi = row["tops_w"]
+        em.emit(table="table2", name=row["name"], tops=row["tops"] or 0.0,
+                tops_w=f"{lo}-{hi}", tech_nm=row["tech_nm"])
+    # speedup/efficiency vs baselines (paper: 11-18x, 1.9-22.9x)
+    tops = cm.system_tops()
+    em.emit(table="table2_ratios",
+            speedup_vs_jssc22=tops / 0.20, speedup_vs_isscc23=tops / 0.12,
+            eff_vs_best=40.8 / 21.82, eff_vs_worst=40.8 / 1.78)
+
+
+def run() -> C.Emitter:
+    em = C.Emitter("system_eval")
+    paper_operating_point(em)
+
+    # measured path: our trained models' sparsity -> cost model
+    for mid in C.MODELS:
+        best = C.MODELS[mid].best_fn
+        mode = LayerMode(impl="cadc", crossbar_size=C.XBAR_DEFAULT, fn=best)
+        tr = C.train_cached(mid, mode)
+        st = C.collect_psum_stats(mid, tr, mode)
+        layers = [
+            sp.LayerPsumStats(name, int(s["segments"]), int(s["count"]),
+                              s["sparsity"], s["segments"] > 1)
+            for name, s in st.items()
+        ]
+        macs = sum(l.count * C.XBAR_DEFAULT for l in layers)
+        rep = cm.evaluate_network(layers, macs=macs, adc_bits=4)
+        red = rep.reductions()
+        em.emit(table="fig10_measured", model=mid,
+                mean_sparsity=sp.summarize(layers)["eliminated_frac"],
+                buffer_transfer_reduction=red["buffer_transfer_reduction"],
+                accum_reduction=red["accum_reduction"],
+                total_psum_energy_reduction=red["total_psum_energy_reduction"],
+                psum_latency_speedup=red["psum_latency_speedup"])
+    em.save()
+    return em
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""CADC core: the paper's contribution as composable JAX ops."""
+from repro.core.adc import AdcConfig, make_psum_transform
+from repro.core.cadc import (
+    CadcOut,
+    cadc_einsum_segments,
+    cadc_matmul,
+    make_cadc_linear,
+    num_segments,
+    pad_to_segments,
+    vconv_matmul,
+)
+from repro.core.conv import cadc_conv2d, im2col, vconv_conv2d
+from repro.core.dendritic import DENDRITIC_FNS
+from repro.core.quant import PAPER_424, QuantConfig, quantize_symmetric, ternarize
+from repro.core.sparsity import LayerPsumStats, psum_count, psum_sparsity, summarize
+
+__all__ = [
+    "AdcConfig",
+    "CadcOut",
+    "DENDRITIC_FNS",
+    "LayerPsumStats",
+    "PAPER_424",
+    "QuantConfig",
+    "cadc_conv2d",
+    "cadc_einsum_segments",
+    "cadc_matmul",
+    "im2col",
+    "make_cadc_linear",
+    "make_psum_transform",
+    "num_segments",
+    "pad_to_segments",
+    "psum_count",
+    "psum_sparsity",
+    "quantize_symmetric",
+    "summarize",
+    "ternarize",
+    "vconv_conv2d",
+    "vconv_matmul",
+]

@@ -1,0 +1,72 @@
+"""ADC (in-memory ramp ADC, "IMA") model: psum quantization + noise.
+
+The paper's IMA digitizes each crossbar psum at 1-5 bit resolution; SPICE
+calibration at 27C/TT gives an output-code error ~ N(mu=-0.11, sigma=0.56)
+LSB (Fig. 7). We reproduce that pipeline as a `psum_transform` hook for
+cadc_matmul/cadc_conv2d:
+
+    raw psum (fp32, "analog") -> clip to full-scale -> code = round(p/LSB)
+    -> code += eps, eps ~ N(mu, sigma)          (noise in CODE space)
+    -> p' = code * LSB                           (back to value space)
+
+For CADC the IMA realizes f() itself (raised ramp V_init), i.e. non-positive
+psums read out as exactly code 0 REGARDLESS of noise on the ramp — this is
+why CADC is noise-robust: ~sparsity fraction of psums contribute zero error.
+We model that by zeroing the noise wherever the ideal code is <= 0 when
+`cadc_mode=True`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdcConfig:
+    bits: int = 4
+    noise_mu: float = -0.11     # LSB units (paper Fig. 7, 27C TT)
+    noise_sigma: float = 0.56   # LSB units
+    full_scale: Optional[float] = None  # None -> auto (max |psum|, sg)
+    cadc_mode: bool = True      # IMA-realized f(): clamped psums are noiseless
+    enabled: bool = True
+
+
+def make_psum_transform(
+    cfg: AdcConfig, key: Optional[jax.Array] = None
+) -> Callable[[Array], Array]:
+    """Returns fp32->fp32 transform to pass as `psum_transform`.
+
+    key=None disables noise injection (pure quantization).
+    """
+
+    def transform(psums: Array) -> Array:
+        if not cfg.enabled:
+            return psums
+        levels = 2 ** cfg.bits - 1
+        if cfg.full_scale is None:
+            fs = jax.lax.stop_gradient(jnp.max(jnp.abs(psums))) + 1e-8
+        else:
+            fs = jnp.asarray(cfg.full_scale, psums.dtype)
+        lsb = fs / levels
+        code = jnp.round(jnp.clip(psums, -fs, fs) / lsb)
+        if key is not None:
+            eps = cfg.noise_mu + cfg.noise_sigma * jax.random.normal(
+                key, psums.shape, psums.dtype
+            )
+            if cfg.cadc_mode:
+                # IMA: SA holds 0 for non-positive MACs -> no noise there.
+                eps = jnp.where(code > 0, eps, 0.0)
+            code = code + eps
+        q = code * lsb
+        # STE so quantized-in-the-loop training still flows gradients.
+        return psums + jax.lax.stop_gradient(q - psums)
+
+    return transform
+
+
+NOMINAL_27C = AdcConfig()  # the paper's nominal corner

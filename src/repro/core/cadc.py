@@ -1,0 +1,157 @@
+"""CADC core: crossbar-partitioned contraction with per-segment dendritic f().
+
+The paper's eq. (4):   y[k] = sum_s  w_soma[s] * f( sum_i w^s[i,k] x^s[i] )
+with w_soma == 1. A linear layer `x @ W` whose contraction dim D is
+partitioned into S = ceil(D / crossbar_size) segments is the exact general
+form; the conv case (paper Fig. 2) reduces to it via im2col (see conv.py).
+
+Layout convention: the contraction dim is padded to S * N and reshaped to
+(S, N). Segment s therefore holds rows [s*N, (s+1)*N) of W — each segment is
+one physical N x N crossbar column-slice, device-local under tensor
+parallelism (see parallel/sharding.py).
+
+Partial sums are computed in float32 (the ADC reads an analog voltage; the
+digital psum is the quantity the whole paper optimizes) and f() is applied
+per segment BEFORE cross-segment accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dendritic
+
+Array = jnp.ndarray
+FnOrName = Union[str, Callable[[Array], Array]]
+
+
+def _resolve_fn(fn: FnOrName) -> Callable[[Array], Array]:
+    return dendritic.get(fn) if isinstance(fn, str) else fn
+
+
+def num_segments(contract_dim: int, crossbar_size: int) -> int:
+    """S = ceil(D / N) — number of crossbars the contraction spans."""
+    if crossbar_size <= 0:
+        raise ValueError(f"crossbar_size must be positive, got {crossbar_size}")
+    return -(-contract_dim // crossbar_size)
+
+
+def pad_to_segments(x: Array, axis: int, crossbar_size: int) -> Array:
+    """Zero-pad `axis` of x up to a multiple of crossbar_size.
+
+    Zero-padding is exact for both vConv and CADC: padded rows contribute 0
+    to every psum, and psum values are unchanged (f is applied to the same
+    totals).
+    """
+    d = x.shape[axis]
+    s = num_segments(d, crossbar_size)
+    pad = s * crossbar_size - d
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+class CadcOut(NamedTuple):
+    y: Array          # accumulated output, x.dtype
+    psums: Optional[Array]  # per-segment psums AFTER f(), fp32, or None
+
+
+def cadc_matmul(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int,
+    fn: FnOrName = "relu",
+    return_psums: bool = False,
+    psum_transform: Optional[Callable[[Array], Array]] = None,
+) -> Union[Array, CadcOut]:
+    """y = sum_s f( x_s @ w_s ), the CADC linear op.
+
+    Args:
+      x: [..., D] activations.
+      w: [D, N] weights.
+      crossbar_size: physical crossbar rows (paper: 64 / 128 / 256).
+      fn: dendritic nonlinearity name or callable ('identity' == vConv).
+      return_psums: also return the [..., S, N] post-f psums (fp32) for
+        sparsity statistics / the system cost model.
+      psum_transform: optional hook applied to RAW psums before f() — used by
+        the ADC model (quantization + noise injection). Signature fp32->fp32.
+
+    Returns:
+      [..., N] output in x.dtype (or CadcOut when return_psums).
+    """
+    f = _resolve_fn(fn)
+    d, n = w.shape
+    if x.shape[-1] != d:
+        raise ValueError(f"contraction mismatch: x[...,{x.shape[-1]}] @ w[{d},{n}]")
+    s = num_segments(d, crossbar_size)
+
+    xp = pad_to_segments(x, -1, crossbar_size)
+    wp = pad_to_segments(w, 0, crossbar_size)
+    xs = xp.reshape(*x.shape[:-1], s, crossbar_size)
+    ws = wp.reshape(s, crossbar_size, n)
+
+    # Per-segment psums in fp32 — the ADC-read quantity.
+    psums = jnp.einsum(
+        "...sk,skn->...sn", xs, ws, preferred_element_type=jnp.float32
+    )
+    if psum_transform is not None:
+        psums = psum_transform(psums)
+    fps = f(psums)
+    y = jnp.sum(fps, axis=-2).astype(x.dtype)
+    if return_psums:
+        return CadcOut(y=y, psums=fps)
+    return y
+
+
+def vconv_matmul(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int,
+    return_psums: bool = False,
+    psum_transform: Optional[Callable[[Array], Array]] = None,
+) -> Union[Array, CadcOut]:
+    """Vanilla (baseline) crossbar-partitioned matmul: identical partitioning,
+    no dendritic nonlinearity. With psum_transform=None this equals x @ w
+    up to fp32 accumulation order."""
+    return cadc_matmul(
+        x,
+        w,
+        crossbar_size=crossbar_size,
+        fn="identity",
+        return_psums=return_psums,
+        psum_transform=psum_transform,
+    )
+
+
+def cadc_einsum_segments(
+    x_seg: Array, w_seg: Array, fn: FnOrName = "relu"
+) -> Array:
+    """Pre-segmented form: x_seg [..., S, K], w_seg [S, K, N] -> [..., N].
+
+    Used by the sharded LM path where segments are laid out on the TP axis
+    and must remain device-local (no collective before f()).
+    """
+    f = _resolve_fn(fn)
+    psums = jnp.einsum(
+        "...sk,skn->...sn", x_seg, w_seg, preferred_element_type=jnp.float32
+    )
+    return jnp.sum(f(psums), axis=-2).astype(x_seg.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Differentiable convenience wrapper with a straight-through option for the
+# quantized path (quant.py composes via psum_transform).
+# ----------------------------------------------------------------------------
+
+def make_cadc_linear(
+    crossbar_size: int, fn: FnOrName = "relu"
+) -> Callable[[Array, Array], Array]:
+    """Returns a (x, w) -> y closure — drop-in for jnp.dot in model defs."""
+    return functools.partial(cadc_matmul, crossbar_size=crossbar_size, fn=fn)

@@ -1,0 +1,152 @@
+"""CADC 2-D convolution via explicit im2col -> segmented matmul.
+
+Paper Fig. 2: a (Cin=64, K1=3, K2=3, Cout=64) kernel on 64x64 crossbars is
+unrolled so that each crossbar holds ONE spatial tap's 64 input channels —
+i.e. the unrolled contraction index is ((k1*K2 + k2)*Cin + cin), channels
+fastest. We reproduce that ordering exactly: with crossbar_size == Cin each
+segment is one (k1, k2) tap, matching the paper's S = 9 example.
+
+Layouts: activations NHWC, weights HWIO (K1, K2, Cin, Cout) — reshaping
+HWIO to (K1*K2*Cin, Cout) is already channels-fastest, so weights and the
+im2col patches below agree without any transpose.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cadc
+
+Array = jnp.ndarray
+
+
+def _norm_padding(
+    padding: Union[str, Sequence[Tuple[int, int]]],
+    kernel: Tuple[int, int],
+    dilation: Tuple[int, int],
+) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return (0, 0), (0, 0)
+        if p == "SAME":
+            pads = []
+            for k, d in zip(kernel, dilation):
+                eff = (k - 1) * d + 1
+                total = eff - 1
+                pads.append((total // 2, total - total // 2))
+            return tuple(pads)  # type: ignore[return-value]
+        raise ValueError(f"unknown padding {padding!r}")
+    (p1, p2) = padding
+    return (tuple(p1), tuple(p2))  # type: ignore[return-value]
+
+
+def im2col(
+    x: Array,
+    kernel: Tuple[int, int],
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    dilation: Tuple[int, int] = (1, 1),
+) -> Array:
+    """x [B,H,W,C] -> patches [B, OH, OW, K1*K2*C], channels fastest.
+
+    Static python loop over the K1*K2 taps (kernels are small); each tap is a
+    strided slice — no gather, XLA fuses these into cheap dynamic-slices.
+    """
+    k1, k2 = kernel
+    s1, s2 = stride
+    d1, d2 = dilation
+    (pt, pb), (pl, pr) = _norm_padding(padding, kernel, dilation)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+    b, hp, wp, c = xp.shape
+    oh = (hp - ((k1 - 1) * d1 + 1)) // s1 + 1
+    ow = (wp - ((k2 - 1) * d2 + 1)) // s2 + 1
+    taps = []
+    for i in range(k1):
+        for j in range(k2):
+            sl = xp[
+                :,
+                i * d1 : i * d1 + (oh - 1) * s1 + 1 : s1,
+                j * d2 : j * d2 + (ow - 1) * s2 + 1 : s2,
+                :,
+            ]
+            taps.append(sl)
+    # [B, OH, OW, K1*K2, C] -> channels-fastest flatten.
+    patches = jnp.stack(taps, axis=3)
+    return patches.reshape(b, oh, ow, k1 * k2 * c)
+
+
+def cadc_conv2d(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int,
+    fn: Union[str, Callable[[Array], Array]] = "relu",
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    dilation: Tuple[int, int] = (1, 1),
+    return_psums: bool = False,
+    psum_transform: Optional[Callable[[Array], Array]] = None,
+) -> Union[Array, cadc.CadcOut]:
+    """CADC convolution: im2col then crossbar-segmented matmul with f().
+
+    x: [B, H, W, Cin] NHWC.  w: [K1, K2, Cin, Cout] HWIO.
+    """
+    k1, k2, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"Cin mismatch: x has {x.shape[-1]}, w has {cin}")
+    patches = im2col(x, (k1, k2), stride=stride, padding=padding, dilation=dilation)
+    w2d = w.reshape(k1 * k2 * cin, cout)
+    return cadc.cadc_matmul(
+        patches,
+        w2d,
+        crossbar_size=crossbar_size,
+        fn=fn,
+        return_psums=return_psums,
+        psum_transform=psum_transform,
+    )
+
+
+def vconv_conv2d(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    dilation: Tuple[int, int] = (1, 1),
+    return_psums: bool = False,
+    psum_transform: Optional[Callable[[Array], Array]] = None,
+) -> Union[Array, cadc.CadcOut]:
+    """Baseline crossbar-partitioned conv (identity f). Equal to
+    lax.conv_general_dilated up to fp32 psum accumulation order."""
+    return cadc_conv2d(
+        x,
+        w,
+        crossbar_size=crossbar_size,
+        fn="identity",
+        stride=stride,
+        padding=padding,
+        dilation=dilation,
+        return_psums=return_psums,
+        psum_transform=psum_transform,
+    )
+
+
+def conv_output_positions(
+    in_hw: Tuple[int, int],
+    kernel: Tuple[int, int],
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    dilation: Tuple[int, int] = (1, 1),
+) -> int:
+    """OH*OW — used by the psum-count accounting in the cost model."""
+    (pt, pb), (pl, pr) = _norm_padding(padding, kernel, dilation)
+    h = in_hw[0] + pt + pb
+    w = in_hw[1] + pl + pr
+    oh = (h - ((kernel[0] - 1) * dilation[0] + 1)) // stride[0] + 1
+    ow = (w - ((kernel[1] - 1) * dilation[1] + 1)) // stride[1] + 1
+    return oh * ow

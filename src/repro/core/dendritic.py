@@ -1,0 +1,64 @@
+"""Dendritic nonlinearities f() applied to per-crossbar partial sums.
+
+Paper (CADC, Sec. III-A): f(x) = 0 for x <= 0, f(x) = g(x) for x > 0 with
+g in {ReLU(x), sqrt(x) (sublinear), k*x^2 (supralinear), tanh(x)}.
+
+All functions here are grad-safe at x == 0 (the sublinear sqrt has an
+unbounded derivative at 0+; we use the standard `where`-guard so neither the
+primal nor the cotangent produces NaN/Inf under jax.grad).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# Default supralinear curvature. The paper leaves k free ("k*x^2"); k=1 over
+# normalized psums keeps the function within trainable range.
+SUPRALINEAR_K = 1.0
+_SQRT_EPS = 1e-12
+
+
+def identity(x: Array) -> Array:
+    """vConv: no dendritic nonlinearity (plain psum accumulation)."""
+    return x
+
+
+def relu(x: Array) -> Array:
+    return jnp.maximum(x, 0)
+
+
+def sublinear(x: Array) -> Array:
+    """f(x) = sqrt(x) for x > 0 else 0, grad-safe at 0."""
+    safe = jnp.where(x > 0, x, 1.0)  # avoid d/dx sqrt at 0 producing inf
+    return jnp.where(x > 0, jnp.sqrt(safe + _SQRT_EPS), 0.0)
+
+
+def supralinear(x: Array, k: float = SUPRALINEAR_K) -> Array:
+    """f(x) = k * x^2 for x > 0 else 0."""
+    return jnp.where(x > 0, k * jnp.square(x), 0.0)
+
+
+def tanh(x: Array) -> Array:
+    """f(x) = tanh(x) for x > 0 else 0."""
+    return jnp.where(x > 0, jnp.tanh(x), 0.0)
+
+
+DENDRITIC_FNS: Dict[str, Callable[[Array], Array]] = {
+    "identity": identity,  # == vConv
+    "relu": relu,
+    "sublinear": sublinear,
+    "supralinear": supralinear,
+    "tanh": tanh,
+}
+
+
+def get(name: str) -> Callable[[Array], Array]:
+    try:
+        return DENDRITIC_FNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown dendritic fn {name!r}; choose from {sorted(DENDRITIC_FNS)}"
+        ) from None

@@ -1,0 +1,88 @@
+"""Fake-quantization (QAT-style) for the paper's 4/2/4-bit configuration.
+
+Paper operating point: 4-bit signed PWM inputs, 2-bit (ternary) weights
+stored in twin-9T bitcells, 4-bit ADC outputs (IMA). We model all three with
+straight-through estimators so the quantized network remains trainable, as
+the paper trains quantized models (Fig. 9 "Quantization and test results").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _ste(x: Array, q: Array) -> Array:
+    """Straight-through: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_symmetric(
+    x: Array, bits: int, *, axis: Optional[int] = None, ste: bool = True
+) -> Array:
+    """Symmetric uniform quantizer with 2^(bits-1)-1 positive levels.
+
+    axis=None -> per-tensor scale; otherwise per-`axis` (e.g. per-channel).
+    """
+    if bits >= 32:
+        return x
+    levels = 2 ** (bits - 1) - 1
+    if axis is None:
+        scale = jnp.max(jnp.abs(x))
+    else:
+        scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(jnp.clip(x / scale, -1.0, 1.0) * levels) / levels * scale
+    return _ste(x, q) if ste else q
+
+
+def ternarize(w: Array, *, ste: bool = True) -> Array:
+    """Ternary weight network quantizer (the paper's 2-bit weights).
+
+    TWN rule: threshold delta = 0.7 * mean|w|; alpha = mean |w| over the
+    supra-threshold set. w_q in {-alpha, 0, +alpha}.
+    """
+    absw = jnp.abs(w)
+    delta = 0.7 * jnp.mean(absw)
+    mask = absw > delta
+    alpha = jnp.sum(absw * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    q = alpha * jnp.sign(w) * mask
+    return _ste(w, q) if ste else q
+
+
+def ternary_codes(w: Array) -> Array:
+    """{-1, 0, +1} int8 codes + implicit per-tensor alpha — the bit-exact
+    crossbar storage format (used by the packed Pallas kernel and tests)."""
+    absw = jnp.abs(w)
+    delta = 0.7 * jnp.mean(absw)
+    return (jnp.sign(w) * (absw > delta)).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """The paper's a/w/o bit triple, e.g. 4/2/4b."""
+
+    input_bits: int = 4
+    weight_bits: int = 2  # 2 -> ternary (twin-9T)
+    adc_bits: int = 4     # output / psum resolution
+    enabled: bool = True
+
+    def quant_input(self, x: Array) -> Array:
+        if not self.enabled:
+            return x
+        return quantize_symmetric(x, self.input_bits)
+
+    def quant_weight(self, w: Array) -> Array:
+        if not self.enabled:
+            return w
+        if self.weight_bits == 2:
+            return ternarize(w)
+        return quantize_symmetric(w, self.weight_bits, axis=0)
+
+
+FP32 = QuantConfig(enabled=False)
+PAPER_424 = QuantConfig(input_bits=4, weight_bits=2, adc_bits=4)

@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    ClassificationSpec,
+    LMTokenSpec,
+    make_classification_dataset,
+    make_event_dataset,
+    make_lm_dataset,
+)
+
+__all__ = [
+    "ClassificationSpec",
+    "LMTokenSpec",
+    "make_classification_dataset",
+    "make_event_dataset",
+    "make_lm_dataset",
+]

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: fused im2col + CADC segmented conv2d.
+
+TPU adaptation (DESIGN.md §2, §6): the paper's crossbar pipeline for conv is
+im2col-unroll -> crossbar psums -> IMA f() -> accumulate. The XLA fallback
+(core/conv.py) materializes patches and psums; this kernel keeps BOTH in
+VMEM:
+
+  * the (padded) feature map tile stays VMEM-resident — CNN-scale fmaps
+    (paper's largest: 32x32x512 fp32 = 2 MB) fit comfortably;
+  * patches are sliced out of the fmap inside the kernel (static tap loop,
+    dynamic row offset) — im2col is never written to HBM;
+  * each crossbar segment's psum tile lives in VREGs, f() applied in place,
+    accumulated into the output tile (the IMA + psum-adder of the paper).
+
+Segmentation is EXACT w.r.t. the reference: the unrolled D = K1*K2*C axis
+(taps outer, channels fastest — core/conv.py order) is cut into S = ceil(D/N)
+contiguous crossbar segments; a segment may span several taps, handled by a
+static python loop over the intersecting taps with psum accumulated BEFORE
+f() — bit-identical grouping to cadc_conv2d.
+
+Grid: (B, OH/bh, Cout/bn, S), S innermost ("arbitrary"); x block = one
+padded image [1, HP, WP, C]; w block = [D, bn] column slice; out block =
+[1, bh, OW, bn] revisited across S.
+
+Constraints: dilation=1; stride via in-register slicing; the padded image
+must fit VMEM (wrapper falls back to the im2col XLA path otherwise — see
+ops.cadc_conv2d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import dendritic
+from repro.core.conv import _norm_padding
+
+Array = jnp.ndarray
+
+
+def _segment_taps(k1: int, k2: int, c: int, xbar: int):
+    """For each segment s: list of (tap_i, tap_j, c_lo, c_sz, d_off) where
+    d_off is the row offset inside the segment's xbar-row window."""
+    d = k1 * k2 * c
+    n_seg = -(-d // xbar)
+    segs = []
+    for s in range(n_seg):
+        lo, hi = s * xbar, min((s + 1) * xbar, d)
+        taps = []
+        t0, t1 = lo // c, (hi - 1) // c
+        for t in range(t0, t1 + 1):
+            i, j = divmod(t, k2)
+            c_lo = max(lo - t * c, 0)
+            c_hi = min(hi - t * c, c)
+            taps.append((i, j, c_lo, c_hi - c_lo, t * c + c_lo - lo))
+        segs.append(taps)
+    return segs
+
+
+def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, segs, k2: int, c: int,
+            bh: int, ow: int, s1: int, s2: int, xbar: int, bn: int):
+    s = pl.program_id(3)
+    oh_blk = pl.program_id(1)
+    oh0 = oh_blk * bh * s1  # first input row of this output row block
+
+    psum = jnp.zeros((bh * ow, bn), jnp.float32)
+    for si, taps in enumerate(segs):
+        @pl.when(s == si)
+        def _body(taps=taps, si=si):
+            p = jnp.zeros((bh * ow, bn), jnp.float32)
+            for (i, j, c_lo, c_sz, d_off) in taps:
+                rows = (bh - 1) * s1 + 1
+                cols = (ow - 1) * s2 + 1
+                xt = pl.load(
+                    x_ref,
+                    (0, pl.ds(oh0 + i, rows), pl.ds(j, cols),
+                     pl.ds(c_lo, c_sz)),
+                )  # [rows, cols, c_sz]
+                xt = xt[::s1, ::s2, :].reshape(bh * ow, c_sz)
+                wt = w_ref[si * xbar + d_off : si * xbar + d_off + c_sz, :]
+                p += jnp.dot(xt.astype(jnp.float32), wt.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            fps = fn(p).reshape(bh, ow, bn)
+
+            @pl.when(s == 0)
+            def _init():
+                o_ref[...] = fps[None]
+
+            @pl.when(s > 0)
+            def _acc():
+                o_ref[...] += fps[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("crossbar_size", "fn", "stride", "padding", "block_h",
+                     "block_n", "interpret"),
+)
+def cadc_conv2d_pallas(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    block_h: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """x [B,H,W,Cin] NHWC, w [K1,K2,Cin,Cout] HWIO -> [B,OH,OW,Cout] fp32."""
+    f = dendritic.get(fn)
+    k1, k2, cin, cout = w.shape
+    s1, s2 = stride
+    (pt, pb), (pl_, pr) = _norm_padding(padding, (k1, k2), (1, 1))
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    b, hp, wp, _ = xp.shape
+    oh = (hp - k1) // s1 + 1
+    ow = (wp - k2) // s2 + 1
+
+    bh = min(block_h, oh)
+    # pad OH to a multiple of bh (extra input rows so the last block reads
+    # in-bounds; results sliced off)
+    oh_pad = -(-oh // bh) * bh
+    extra_rows = (oh_pad - 1) * s1 + k1 - hp
+    if extra_rows > 0:
+        xp = jnp.pad(xp, ((0, 0), (0, extra_rows), (0, 0), (0, 0)))
+        hp = xp.shape[1]
+    bn = min(block_n, cout)
+    cout_pad = -(-cout // bn) * bn
+    w2d = w.reshape(k1 * k2 * cin, cout)
+    if cout_pad != cout:
+        w2d = jnp.pad(w2d, ((0, 0), (0, cout_pad - cout)))
+
+    segs = _segment_taps(k1, k2, cin, crossbar_size)
+    grid = (b, oh_pad // bh, cout_pad // bn, len(segs))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, fn=f, segs=segs, k2=k2, c=cin, bh=bh, ow=ow,
+            s1=s1, s2=s2, xbar=crossbar_size, bn=bn,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda bi, hi, ni, si: (bi, 0, 0, 0)),
+            pl.BlockSpec((k1 * k2 * cin, bn), lambda bi, hi, ni, si: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bh, ow, bn), lambda bi, hi, ni, si: (bi, hi, 0, ni)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, oh_pad, ow, cout_pad), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, w2d)
+    return out[:, :oh, :, :cout]

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: CADC segmented matmul with fused dendritic f().
+
+TPU adaptation of the paper's crossbar pipeline (DESIGN.md §2): the
+contraction dim D = S * xbar is blocked at the crossbar size; each grid step
+computes one crossbar's psum tile on the MXU, applies f() in VREGs (the IMA),
+and accumulates into the output tile resident in VMEM (the psum adder).
+Psums therefore never touch HBM — the fusion IS the zero-compression win on
+this hardware.
+
+Grid: (M/bm, N/bn, S), S innermost ("arbitrary" = sequential revisiting of
+the same output block; m/n are "parallel"). VMEM working set per step:
+bm*xbar + xbar*bn (inputs, x dtype) + bm*bn fp32 accumulator — with
+bm=bn=256, xbar=256, bf16 inputs: 0.25 + 0.25 + 0.25 MB, far under 16 MB
+VMEM; MXU dims are multiples of 128 by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import dendritic
+
+Array = jnp.ndarray
+
+
+def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, n_segments: int):
+    s = pl.program_id(2)
+    # One crossbar tile on the MXU; psum in fp32 (the "ADC-read" quantity).
+    psum = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    fps = fn(psum)  # IMA: dendritic f() fused in VREG, per segment.
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = fps
+
+    @pl.when(s > 0)
+    def _acc():
+        o_ref[...] += fps
+
+
+def _q8_kernel(x_ref, w_ref, scale_ref, o_ref, *, fn: Callable, n_segments: int):
+    """Quantized variant: int8 activations x int8 ternary codes -> int32
+    psums on the MXU, rescaled to fp32 before f(). scale_ref is (1,1) SMEM
+    fp32 = (input_scale * weight_alpha)."""
+    s = pl.program_id(2)
+    psum_i32 = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    psum = psum_i32.astype(jnp.float32) * scale_ref[0, 0]
+    fps = fn(psum)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = fps
+
+    @pl.when(s > 0)
+    def _acc():
+        o_ref[...] += fps
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    d = x.shape[axis]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret"),
+)
+def cadc_matmul_pallas(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """y[M,N] = sum_s f( x[:, s*xbar:(s+1)*xbar] @ w[s*xbar:(s+1)*xbar, :] ).
+
+    x: [M, D] (or [..., D], flattened internally), w: [D, N]. Output fp32.
+    """
+    f = dendritic.get(fn)
+    *lead, d = x.shape
+    n = w.shape[1]
+    if w.shape[0] != d:
+        raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+
+    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+    wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+    mp, dp = xp.shape
+    np_ = wp.shape[1]
+    n_seg = dp // crossbar_size
+    grid = (mp // block_m, np_ // block_n, n_seg)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, fn=f, n_segments=n_seg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, crossbar_size), lambda i, j, s: (i, s)),
+            pl.BlockSpec((crossbar_size, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret"),
+)
+def cadc_matmul_q8_pallas(
+    x_q: Array,
+    w_codes: Array,
+    scale: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """Quantized CADC: x_q int8 [M, D], w_codes int8 {-1,0,1} [D, N],
+    scale fp32 scalar (input_lsb * weight_alpha). Output fp32."""
+    f = dendritic.get(fn)
+    *lead, d = x_q.shape
+    n = w_codes.shape[1]
+    x2 = x_q.reshape(-1, d)
+    m = x2.shape[0]
+
+    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+    wp = _pad_to(_pad_to(w_codes, 0, crossbar_size), 1, block_n)
+    mp, dp = xp.shape
+    np_ = wp.shape[1]
+    n_seg = dp // crossbar_size
+    grid = (mp // block_m, np_ // block_n, n_seg)
+    scale2 = scale.reshape(1, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_q8_kernel, fn=f, n_segments=n_seg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, crossbar_size), lambda i, j, s: (i, s)),
+            pl.BlockSpec((crossbar_size, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec(
+                (1, 1), lambda i, j, s: (0, 0), memory_space=pl.ANY
+            ),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp, scale2)
+    return out[:m, :n].reshape(*lead, n)

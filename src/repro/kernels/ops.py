@@ -1,0 +1,119 @@
+"""Public jit'd wrappers: Pallas kernel on TPU, XLA path elsewhere.
+
+`impl` resolution:
+  * "pallas"     — pl.pallas_call compiled for TPU (requires TPU backend)
+  * "interpret"  — Pallas interpret mode (CPU correctness path / CI)
+  * "xla"        — core.cadc einsum formulation (always available; the
+                   distribution layer uses this: it shards cleanly)
+  * "auto"       — pallas on TPU, xla otherwise
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cadc as _core
+from repro.kernels import cadc_matmul as _pk
+
+Array = jnp.ndarray
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def cadc_matmul(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    impl: str = "auto",
+    block_m: int = 256,
+    block_n: int = 256,
+) -> Array:
+    """y = sum_s f(x_s @ w_s). Output in x.dtype (xla) / fp32 (pallas)."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _core.cadc_matmul(x, w, crossbar_size=crossbar_size, fn=fn)
+    return _pk.cadc_matmul_pallas(
+        x,
+        w,
+        crossbar_size=crossbar_size,
+        fn=fn,
+        block_m=block_m,
+        block_n=block_n,
+        interpret=(mode == "interpret"),
+    ).astype(x.dtype)
+
+
+def cadc_matmul_q8(
+    x_q: Array,
+    w_codes: Array,
+    scale: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    impl: str = "auto",
+    block_m: int = 256,
+    block_n: int = 256,
+) -> Array:
+    mode = _resolve(impl)
+    if mode == "xla":
+        from repro.kernels import ref
+
+        return ref.cadc_matmul_q8_ref(
+            x_q, w_codes, scale, crossbar_size=crossbar_size, fn=fn
+        )
+    return _pk.cadc_matmul_q8_pallas(
+        x_q,
+        w_codes,
+        scale,
+        crossbar_size=crossbar_size,
+        fn=fn,
+        block_m=block_m,
+        block_n=block_n,
+        interpret=(mode == "interpret"),
+    )
+
+
+def cadc_conv2d(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    stride=(1, 1),
+    padding="SAME",
+    impl: str = "auto",
+    block_h: int = 8,
+    block_n: int = 128,
+    vmem_budget_bytes: int = 8 * 2**20,
+) -> Array:
+    """Fused im2col + segmented conv (psums and patches never hit HBM).
+
+    Falls back to the XLA im2col path when the padded feature map would not
+    fit the kernel's VMEM budget or dilation is needed.
+    """
+    from repro.core import conv as _conv
+    from repro.kernels import cadc_conv as _ck
+
+    mode = _resolve(impl)
+    fmap_bytes = int(
+        x.shape[0] and (x.shape[1] + w.shape[0]) * (x.shape[2] + w.shape[1])
+        * x.shape[3] * 4
+    )
+    if mode == "xla" or fmap_bytes > vmem_budget_bytes:
+        return _conv.cadc_conv2d(
+            x, w, crossbar_size=crossbar_size, fn=fn, stride=stride,
+            padding=padding,
+        )
+    return _ck.cadc_conv2d_pallas(
+        x, w, crossbar_size=crossbar_size, fn=fn, stride=tuple(stride),
+        padding=padding, block_h=block_h, block_n=block_n,
+        interpret=(mode == "interpret"),
+    ).astype(x.dtype)

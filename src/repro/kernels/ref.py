@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (independent of core/)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import dendritic
+
+Array = jnp.ndarray
+
+
+def _segments(x: Array, w: Array, xbar: int):
+    d = x.shape[-1]
+    s = -(-d // xbar)
+    pad = s * xbar - d
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        w = jnp.pad(w, [(0, pad), (0, 0)])
+    xs = x.reshape(*x.shape[:-1], s, xbar)
+    ws = w.reshape(s, xbar, w.shape[1])
+    return xs, ws
+
+
+def cadc_matmul_ref(x: Array, w: Array, *, crossbar_size: int, fn: str) -> Array:
+    """Oracle: per-segment fp32 psums -> f -> sum. Output fp32."""
+    f = dendritic.get(fn)
+    xs, ws = _segments(x.astype(jnp.float32), w.astype(jnp.float32), crossbar_size)
+    psums = jnp.einsum("...sk,skn->...sn", xs, ws,
+                       preferred_element_type=jnp.float32)
+    return jnp.sum(f(psums), axis=-2)
+
+
+def cadc_matmul_q8_ref(
+    x_q: Array, w_codes: Array, scale: Array, *, crossbar_size: int, fn: str
+) -> Array:
+    """Oracle for the quantized kernel: int32 psums, rescale, f, sum."""
+    f = dendritic.get(fn)
+    xs, ws = _segments(x_q.astype(jnp.int32), w_codes.astype(jnp.int32),
+                       crossbar_size)
+    psums_i = jnp.einsum("...sk,skn->...sn", xs, ws,
+                         preferred_element_type=jnp.int32)
+    psums = psums_i.astype(jnp.float32) * scale.astype(jnp.float32)
+    return jnp.sum(f(psums), axis=-2)

@@ -1,0 +1,425 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first init:
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, smoke_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.parallel import sharding as shard_lib
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+# v5e constants for the roofline terms (see benchmarks/roofline.py)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+# iota format on large meshes: replica_groups=[num_groups,group_size]<=[...]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def parse_collective_bytes(hlo_text: str,
+                           bf16_wire_correction: bool = False
+                           ) -> Dict[str, float]:
+    """Per-DEVICE wire bytes per collective kind from post-SPMD HLO.
+
+    Post-SPMD shapes are per-device; for a ring over a group of g devices
+    the bytes each device moves are (result = the op's LHS shape):
+      all-gather       ~ result * (g-1)/g   (result is the gathered shape)
+      all-reduce       ~ 2 * result * (g-1)/g
+      reduce-scatter   ~ result * (g-1)     (result is the scattered shard)
+      all-to-all       ~ result * (g-1)/g
+      collective-permute ~ result
+
+    bf16_wire_correction (§Perf iter 2): the CPU backend's float
+    normalization promotes bf16 dots — and the ARs/AGs riding their
+    partial sums — to f32, even though the StableHLO program carries
+    bf16 (verified: tests/test_tp_cadc.py + dryrun probes). On the TPU
+    target those payloads stay bf16, so the correction halves every
+    f32 all-reduce/all-gather payload above 1 MiB (the only
+    legitimately-f32 large payload is the lm-head dgrad AR, once per
+    step — bounded flattering, noted in EXPERIMENTS.md §Roofline).
+    """
+    out: Dict[str, float] = {
+        k: 0.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, dtype, dims = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(1, gm.group(1).count(",") + 1)
+        else:
+            gm = _GROUPS_IOTA_RE.search(line)
+            if gm:
+                g = max(1, int(gm.group(2)))
+        size = numel * nbytes
+        if (bf16_wire_correction and dtype == "f32" and size > 2**20
+                and kind in ("all-reduce", "all-gather")):
+            size *= 0.5
+        if kind == "all-gather":
+            size *= (g - 1) / g
+        elif kind == "all-reduce":
+            size *= 2 * (g - 1) / g
+        elif kind == "reduce-scatter":
+            size *= (g - 1)
+        elif kind == "all-to-all":
+            size *= (g - 1) / g
+        out[kind] += size
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_token = 6 * n_active if shape.kind == "train" else 2 * n_active
+    return float(per_token) * tokens
+
+
+def active_params(cfg, n_params: int) -> int:
+    """MoE: only top-k (+shared) experts are active per token."""
+    if cfg.moe.n_experts == 0:
+        return n_params
+    m = cfg.moe
+    d = cfg.d_model
+    per_expert = 3 * d * m.d_expert
+    expert_total = m.n_experts * per_expert
+    active = m.top_k * per_expert
+    return n_params - expert_total + active
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, smoke: bool = False,
+             audit: bool = False,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """audit=True: cost-audit variant for §Roofline — layers UNROLLED and
+    n_microbatches=1 so cost_analysis() counts every layer's FLOPs/bytes and
+    the HLO text contains every collective (XLA prices a lax.scan body only
+    ONCE, which undercounts the production scan-over-layers lowering by
+    n_layers x n_micro). Production feasibility (compile + memory fit) comes
+    from the default scan variant; flops/bytes/collectives from the audit."""
+    cfg = (smoke_config if smoke else get_config)(arch, **(overrides or {}))
+    if audit:
+        cfg = cfg.with_overrides(scan_layers=False, n_microbatches=1,
+                                 attn_unroll=True)
+    shape = SHAPES[shape_name]
+    if smoke:
+        import dataclasses
+        shape = dataclasses.replace(
+            shape, seq_len=min(shape.seq_len, 128),
+            global_batch=min(shape.global_batch, 8),
+        )
+    if shape_name not in cfg.shape_cells():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "SKIP", "reason": cfg.skip_reasons()[shape_name]}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    params_shape = steps_lib.abstract_params(cfg)
+    n_params = sum(
+        int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params_shape)
+    )
+    pspecs = shard_lib.param_specs(params_shape, cfg, mesh)
+    pshard = shard_lib.to_named(pspecs, mesh)
+    bspecs = shard_lib.batch_specs(cfg, mesh, shape.kind)
+    bshard = shard_lib.to_named(
+        jax.tree_util.tree_map(lambda s: s, bspecs), mesh
+    )
+    inputs = steps_lib.input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            optimizer = steps_lib.make_optimizer(cfg)
+            opt_shape = steps_lib.abstract_opt_state(optimizer, params_shape)
+            ospecs = jax.tree_util.tree_map(
+                lambda _: pspecs, {"m": 0, "v": 0}
+            )
+            oshard = {"m": shard_lib.to_named(pspecs, mesh),
+                      "v": shard_lib.to_named(pspecs, mesh)}
+            step_fn = steps_lib.make_train_step(cfg, optimizer)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, oshard, bshard,
+                              jax.sharding.NamedSharding(
+                                  mesh, jax.sharding.PartitionSpec())),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                params_shape, opt_shape, inputs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        elif shape.kind == "prefill":
+            step_fn = steps_lib.make_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                             out_shardings=None)
+            lowered = jitted.lower(params_shape, inputs)
+        else:  # decode
+            caches_shape = steps_lib.abstract_caches(
+                cfg, shape.global_batch, shape.seq_len
+            )
+            cspecs = shard_lib.cache_specs(caches_shape, cfg, mesh,
+                                           shape.global_batch)
+            cshard = shard_lib.to_named(cspecs, mesh)
+            step_fn = steps_lib.make_serve_step(cfg)
+            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(pshard, rep, rep, cshard),
+                out_shardings=(None, None, cshard),
+                donate_argnums=(3,),
+            )
+            lowered = jitted.lower(
+                params_shape,
+                inputs["tokens"],
+                inputs["position"],
+                caches_shape,
+            )
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(
+        hlo,
+        bf16_wire_correction=(cfg.bf16_wire and cfg.dtype == "bfloat16"),
+    )
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    n_active = active_params(cfg, n_params)
+    mflops = model_flops(cfg, shape, n_params, n_active)
+    # XLA cost_analysis() is PER-DEVICE after SPMD partitioning (verified:
+    # a [M,K]x[K,N] matmul on 16 devices reports 2MKN/16), and a lax.scan
+    # body is priced ONCE (hence the --audit unrolled lowering for honest
+    # totals). All roofline terms below are therefore per-chip seconds.
+    hlo_flops = float(cost.get("flops", 0.0))          # per chip
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))  # per chip
+    hlo_flops_global = hlo_flops * n_chips
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": ("multi" if multi_pod else "single") + ("_audit" if audit else ""),
+        "status": "OK",
+        "n_chips": n_chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {
+            "hlo_flops_per_chip": hlo_flops,
+            "hlo_bytes_per_chip": hlo_bytes,
+            "hlo_flops_global": hlo_flops_global,
+            "model_flops": mflops,
+            "useful_ratio": (
+                (mflops / hlo_flops_global) if hlo_flops_global else None
+            ),
+        },
+        "collectives": coll,  # per-device wire bytes
+        "roofline_s": {
+            "compute": hlo_flops / PEAK_FLOPS,
+            "memory": hlo_bytes / HBM_BW,
+            "collective": coll["total"] / LINK_BW,
+        },
+    }
+    terms = report["roofline_s"]
+    report["bottleneck"] = max(terms, key=terms.get)
+    return report
+
+
+def run_cell_audit_diff(arch: str, shape_name: str, *, multi_pod: bool = False,
+                        overrides: Optional[Dict[str, Any]] = None
+                        ) -> Dict[str, Any]:
+    """Differential cost audit (§Roofline): XLA prices a lax.scan body once
+    and full unrolled lowerings of 28-56-layer stacks take tens of minutes,
+    so instead lower TWO cheap variants under identical mesh/shardings —
+
+        probe1: n_layers = len(pattern)     (ONE unit, unrolled, n_micro=1)
+        probe2: n_layers = 2 * len(pattern) (TWO units)
+
+    and extrapolate: per_unit = probe2 - probe1; base = probe1 - per_unit;
+    cost(L) = base + per_unit * L / len(pattern). Exact under layer
+    homogeneity (the stacks repeat the pattern unit; the remainder is
+    covered by the fractional scale). Both probes contain real layers so
+    compiler DCE noise on degenerate 0-layer graphs cannot skew the
+    extrapolation (it did: decode cells went negative with a 0-layer
+    base). Applies to flops, bytes, and every collective bucket."""
+    cfg_probe = (get_config)(arch, **(overrides or {}))
+    p = len(cfg_probe.pattern)
+    n_layers = cfg_probe.n_layers
+
+    ov = dict(overrides or {})
+    probe1 = run_cell(arch, shape_name, multi_pod, audit=True,
+                      overrides={**ov, "n_layers": p})
+    if probe1["status"] != "OK":
+        return probe1
+    probe2 = run_cell(arch, shape_name, multi_pod, audit=True,
+                      overrides={**ov, "n_layers": 2 * p})
+    if probe2["status"] != "OK":
+        return probe2
+
+    scale = n_layers / p
+    rep = dict(probe2)
+    rep["mesh"] = ("multi" if multi_pod else "single") + "_audit"
+    rep["audit_method"] = f"diff2(unit={p}L, 2unit={2*p}L, scale={scale:.2f})"
+    rep["n_params"] = probe1["n_params"] + int(
+        (probe2["n_params"] - probe1["n_params"]) * (scale - 1))
+    rep["n_active_params"] = probe1["n_active_params"] + int(
+        (probe2["n_active_params"] - probe1["n_active_params"]) * (scale - 1))
+
+    def extrap(b1, b2):
+        per_unit = b2 - b1
+        return max(b1 - per_unit, 0.0) + per_unit * scale
+
+    cost = {}
+    for k in ("hlo_flops_per_chip", "hlo_bytes_per_chip"):
+        cost[k] = extrap(probe1["cost"][k], probe2["cost"][k])
+    cost["hlo_flops_global"] = cost["hlo_flops_per_chip"] * rep["n_chips"]
+    cost["model_flops"] = model_flops(
+        cfg_probe, SHAPES[shape_name], rep["n_params"],
+        active_params(cfg_probe, rep["n_params"]))
+    cost["useful_ratio"] = (
+        cost["model_flops"] / cost["hlo_flops_global"]
+        if cost["hlo_flops_global"] else None)
+    rep["cost"] = cost
+
+    coll = {}
+    for k in probe2["collectives"]:
+        coll[k] = extrap(probe1["collectives"].get(k, 0.0),
+                         probe2["collectives"][k])
+    rep["collectives"] = coll
+    rep["roofline_s"] = {
+        "compute": cost["hlo_flops_per_chip"] / PEAK_FLOPS,
+        "memory": cost["hlo_bytes_per_chip"] / HBM_BW,
+        "collective": coll["total"] / LINK_BW,
+    }
+    rep["bottleneck"] = max(rep["roofline_s"], key=rep["roofline_s"].get)
+    rep["memory"] = {"note": "memory feasibility comes from the production "
+                             "(scan) cell; audit memory is the 1-unit probe"}
+    return rep
+
+
+def save_report(report: Dict[str, Any], out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(
+        out_dir,
+        f"{report['arch']}__{report['shape']}__{report['mesh']}.json",
+    )
+    with open(fn, "w") as f:
+        json.dump(report, f, indent=2)
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--audit", action="store_true",
+                    help="cost-audit lowering (unrolled, no microbatch scan)")
+    ap.add_argument("--audit-diff", action="store_true",
+                    help="differential cost audit (0-layer + 1-unit probes)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    if args.audit_diff:
+                        rep = run_cell_audit_diff(arch, shape, multi_pod=mp,
+                                                  overrides=overrides)
+                    else:
+                        rep = run_cell(arch, shape, mp, smoke=args.smoke,
+                                       audit=args.audit, overrides=overrides)
+                    fn = save_report(rep, args.out)
+                    if rep["status"] == "SKIP":
+                        print(f"[SKIP] {tag}: {rep['reason']}")
+                    else:
+                        r = rep["roofline_s"]
+                        print(
+                            f"[OK]   {tag}: compile={rep['compile_s']}s "
+                            f"bottleneck={rep['bottleneck']} "
+                            f"compute={r['compute']:.3e}s "
+                            f"memory={r['memory']:.3e}s "
+                            f"coll={r['collective']:.3e}s -> {fn}"
+                        )
+                except Exception:
+                    print(f"[FAIL] {tag}")
+                    traceback.print_exc()
+                    rep = {"arch": arch, "shape": shape,
+                           "mesh": ("multi" if mp else "single")
+                                   + ("_audit" if args.audit else ""),
+                           "status": "FAIL",
+                           "error": traceback.format_exc()[-2000:]}
+                    save_report(rep, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production meshes (v5e): single-pod 16x16 = 256 chips, multi-pod 2x16x16.
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes that carry data parallelism (pods do DP over DCI)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

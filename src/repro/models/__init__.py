@@ -1,0 +1,1 @@
+"""Model zoo: paper CNNs (models.cnn) + assigned LM architectures (models.lm)."""

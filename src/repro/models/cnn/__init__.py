@@ -1,0 +1,1 @@
+"""Paper benchmark CNNs: LeNet-5, ResNet-18, VGG-16, SNN."""

@@ -1,0 +1,46 @@
+"""LeNet-5 (paper benchmark #1, MNIST).
+
+Classic topology on 32x32 (28x28 inputs are padded): C1 5x5x6 -> P ->
+C2 5x5x16 -> P -> FC 400-120-84-classes. Conv-1 fits a single 64x64
+crossbar (5*5*1 = 25 rows) and generates no psums — exactly the paper's
+"Conv-1 excluded" note for Fig. 5.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init(key, *, num_classes: int = 10, in_ch: int = 1, width: int = 1):
+    k = jax.random.split(key, 5)
+    c1, c2 = 6 * width, 16 * width
+    params = {
+        "c1": cm.conv_init(k[0], 5, 5, in_ch, c1),
+        "c2": cm.conv_init(k[1], 5, 5, c1, c2),
+        "f1": cm.dense_init(k[2], c2 * 25, 120 * width),
+        "f2": cm.dense_init(k[3], 120 * width, 84 * width),
+        "f3": cm.dense_init(k[4], 84 * width, num_classes),
+    }
+    state: Dict[str, Any] = {}
+    return params, state
+
+
+def apply(params, state, x, ctx: cm.Ctx, *, train: bool = False):
+    """x: [B, 28, 28, C] or [B, 32, 32, C]."""
+    if x.shape[1] == 28:
+        x = jnp.pad(x, ((0, 0), (2, 2), (2, 2), (0, 0)))
+    h = cm.conv_forward(params["c1"], x, ctx, padding="VALID", name="conv1")
+    h = jax.nn.relu(h)
+    h = cm.avg_pool(h)
+    h = cm.conv_forward(params["c2"], h, ctx, padding="VALID", name="conv2")
+    h = jax.nn.relu(h)
+    h = cm.avg_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(cm.linear_forward(params["f1"], h, ctx, name="fc1"))
+    h = jax.nn.relu(cm.linear_forward(params["f2"], h, ctx, name="fc2"))
+    logits = cm.linear_forward(params["f3"], h, ctx, name="fc3")
+    return logits, state

@@ -1,0 +1,86 @@
+"""Spiking CNN (paper benchmark #4, DVS Gesture).
+
+Two conv layers + one FC, LIF neurons, BPTT over T timesteps via lax.scan
+with an arctan surrogate gradient. Paper finds the sublinear f() (sqrt) best
+for this model. Input: event frames [B, T, H, W, 2] (on/off polarities).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+THRESH = 1.0
+DECAY = 0.5
+
+
+@jax.custom_jvp
+def spike(v):
+    return (v > THRESH).astype(v.dtype)
+
+
+@spike.defjvp
+def _spike_jvp(primals, tangents):
+    (v,), (dv,) = primals, tangents
+    y = spike(v)
+    # arctan surrogate: pi^2/4 width
+    surrogate = 1.0 / (1.0 + (jnp.pi * (v - THRESH)) ** 2)
+    return y, surrogate * dv
+
+
+def init(key, *, num_classes: int = 11, in_ch: int = 2, width: int = 32,
+         hw: int = 32):
+    k = jax.random.split(key, 3)
+    c1, c2 = width, width * 2
+    feat_hw = hw // 4  # two 2x2 pools
+    params = {
+        "c1": cm.conv_init(k[0], 3, 3, in_ch, c1),
+        "c2": cm.conv_init(k[1], 3, 3, c1, c2),
+        "fc": cm.dense_init(k[2], feat_hw * feat_hw * c2, num_classes),
+    }
+    return params, {}
+
+
+def apply(params, state, x, ctx: cm.Ctx, *, train: bool = False):
+    """x: [B, T, H, W, C] event frames -> rate-accumulated logits."""
+    b, t, h, w, c = x.shape
+
+    def step(carry, x_t):
+        v1, v2, acc = carry
+        h1 = cm.conv_forward(params["c1"], x_t, ctx, name="conv1")
+        h1 = cm.avg_pool(h1)
+        v1 = DECAY * v1 + h1
+        s1 = spike(v1)
+        v1 = v1 - s1 * THRESH  # soft reset
+
+        h2 = cm.conv_forward(params["c2"], s1, ctx, name="conv2")
+        h2 = cm.avg_pool(h2)
+        v2 = DECAY * v2 + h2
+        s2 = spike(v2)
+        v2 = v2 - s2 * THRESH
+
+        flat = s2.reshape(s2.shape[0], -1)
+        logits_t = cm.linear_forward(params["fc"], flat, ctx, name="fc")
+        return (v1, v2, acc + logits_t), None
+
+    c1 = params["c1"]["w"].shape[-1]
+    c2 = params["c2"]["w"].shape[-1]
+    n_cls = params["fc"]["w"].shape[-1]
+    v1 = jnp.zeros((b, h // 2, w // 2, c1))
+    v2 = jnp.zeros((b, h // 4, w // 4, c2))
+    acc = jnp.zeros((b, n_cls))
+
+    if ctx.mode.collect_stats or ctx.rng is not None:
+        # stats/noise need the python loop (Ctx is stage-out-side state).
+        carry = (v1, v2, acc)
+        for ti in range(t):
+            carry, _ = step(carry, x[:, ti])
+        acc = carry[2]
+    else:
+        (_, _, acc), _ = jax.lax.scan(
+            step, (v1, v2, acc), jnp.moveaxis(x, 1, 0)
+        )
+    return acc / t, state

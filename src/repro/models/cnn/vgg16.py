@@ -1,0 +1,52 @@
+"""VGG-16 with BN, CIFAR variant (paper benchmark #3, CIFAR-100)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+# (channels, n_convs) per stage; 'M' pooling after each stage.
+CFG = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def init(key, *, num_classes: int = 100, in_ch: int = 3, width_div: int = 1):
+    params: Dict[str, Any] = {}
+    state: Dict[str, Any] = {}
+    keys = jax.random.split(key, 20)
+    ki = 0
+    cin = in_ch
+    for si, (c, n) in enumerate(CFG):
+        c = max(8, c // width_div)
+        for bi in range(n):
+            params[f"c{si}_{bi}"] = cm.conv_init(keys[ki], 3, 3, cin, c)
+            bnp, bns = cm.bn_init(c)
+            params[f"bn{si}_{bi}"] = bnp
+            state[f"bn{si}_{bi}"] = bns
+            cin = c
+            ki += 1
+    fc_dim = max(8, 512 // width_div)
+    params["f1"] = cm.dense_init(keys[ki], cin, fc_dim)
+    params["f2"] = cm.dense_init(keys[ki + 1], fc_dim, fc_dim)
+    params["f3"] = cm.dense_init(keys[ki + 2], fc_dim, num_classes)
+    return params, state
+
+
+def apply(params, state, x, ctx: cm.Ctx, *, train: bool = False):
+    new_state: Dict[str, Any] = {}
+    h = x
+    for si, (c, n) in enumerate(CFG):
+        for bi in range(n):
+            h = cm.conv_forward(params[f"c{si}_{bi}"], h, ctx, name=f"c{si}_{bi}")
+            h, new_state[f"bn{si}_{bi}"] = cm.bn_forward(
+                params[f"bn{si}_{bi}"], state[f"bn{si}_{bi}"], h, train=train
+            )
+            h = jax.nn.relu(h)
+        h = cm.max_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(cm.linear_forward(params["f1"], h, ctx, name="fc1"))
+    h = jax.nn.relu(cm.linear_forward(params["f2"], h, ctx, name="fc2"))
+    logits = cm.linear_forward(params["f3"], h, ctx, name="fc3")
+    return logits, new_state

@@ -1,0 +1,206 @@
+"""Shared functional layer machinery for all models.
+
+Every weight-bearing layer routes through `linear_forward`/`conv_forward`,
+which dispatch on LayerMode.impl: 'vconv' (baseline partitioned matmul) or
+'cadc' (per-crossbar dendritic f()). Quantization (4/2/4b etc.) and the ADC
+noise model compose via the same mode. Psum sparsity statistics are collected
+through the Ctx object (pytree-compatible — works under jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_lib
+from repro.core import cadc as cadc_lib
+from repro.core import conv as conv_lib
+from repro.core.quant import FP32, QuantConfig
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMode:
+    """How weight-bearing layers execute. This is the paper's experiment axis."""
+
+    impl: str = "vconv"                 # 'vconv' | 'cadc'
+    crossbar_size: int = 64             # 64 / 128 / 256 (paper sweep)
+    fn: str = "relu"                    # dendritic f() for cadc
+    quant: QuantConfig = FP32
+    adc: Optional[adc_lib.AdcConfig] = None
+    collect_stats: bool = False
+
+    def dendritic_fn(self) -> str:
+        return self.fn if self.impl == "cadc" else "identity"
+
+
+VCONV = LayerMode()
+CADC64 = LayerMode(impl="cadc", crossbar_size=64)
+
+
+class Ctx:
+    """Per-forward mutable context: rng for ADC noise, psum stats sink."""
+
+    def __init__(self, mode: LayerMode, rng: Optional[jax.Array] = None):
+        self.mode = mode
+        self.rng = rng
+        self.stats: List[Dict[str, Array]] = []
+        self._names: List[str] = []
+        self._i = 0
+
+    def next_key(self) -> Optional[jax.Array]:
+        if self.rng is None:
+            return None
+        self._i += 1
+        return jax.random.fold_in(self.rng, self._i)
+
+    def psum_transform(self):
+        if self.mode.adc is None:
+            return None
+        return adc_lib.make_psum_transform(self.mode.adc, self.next_key())
+
+    def record(self, name: str, psums: Optional[Array], segments: int):
+        if not self.mode.collect_stats or psums is None:
+            return
+        self._names.append(name)
+        self.stats.append(
+            {
+                "sparsity": jnp.mean((psums == 0).astype(jnp.float32)),
+                "count": jnp.asarray(float(psums.size // psums.shape[0]), jnp.float32),
+                "segments": jnp.asarray(float(segments), jnp.float32),
+            }
+        )
+
+    def stats_dict(self) -> Dict[str, Dict[str, Array]]:
+        return dict(zip(self._names, self.stats))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def dense_init(key, d_in, d_out, *, bias=True, dtype=jnp.float32) -> Params:
+    p = {"w": he_init(key, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def conv_init(key, k1, k2, cin, cout, *, dtype=jnp.float32) -> Params:
+    return {"w": he_init(key, (k1, k2, cin, cout), k1 * k2 * cin, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# forward ops
+# ---------------------------------------------------------------------------
+
+def linear_forward(p: Params, x: Array, ctx: Ctx, *, name: str = "fc") -> Array:
+    mode = ctx.mode
+    w = mode.quant.quant_weight(p["w"])
+    xq = mode.quant.quant_input(x)
+    segs = cadc_lib.num_segments(w.shape[0], mode.crossbar_size)
+    want_ps = mode.collect_stats and segs > 1
+    out = cadc_lib.cadc_matmul(
+        xq,
+        w,
+        crossbar_size=mode.crossbar_size,
+        fn=mode.dendritic_fn(),
+        return_psums=want_ps,
+        psum_transform=ctx.psum_transform() if segs > 1 or mode.adc else None,
+    )
+    if want_ps:
+        y, psums = out.y, out.psums
+        ctx.record(name, psums, segs)
+    else:
+        y = out
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv_forward(
+    p: Params,
+    x: Array,
+    ctx: Ctx,
+    *,
+    stride=(1, 1),
+    padding="SAME",
+    name: str = "conv",
+) -> Array:
+    mode = ctx.mode
+    w = mode.quant.quant_weight(p["w"])
+    xq = mode.quant.quant_input(x)
+    k1, k2, cin, _ = w.shape
+    segs = cadc_lib.num_segments(k1 * k2 * cin, mode.crossbar_size)
+    want_ps = mode.collect_stats and segs > 1
+    out = conv_lib.cadc_conv2d(
+        xq,
+        w,
+        crossbar_size=mode.crossbar_size,
+        fn=mode.dendritic_fn(),
+        stride=stride,
+        padding=padding,
+        return_psums=want_ps,
+        psum_transform=ctx.psum_transform() if segs > 1 or mode.adc else None,
+    )
+    if want_ps:
+        y, psums = out.y, out.psums
+        ctx.record(name, psums, segs)
+    else:
+        y = out
+    return y
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (functional, EMA state threaded)
+# ---------------------------------------------------------------------------
+
+def bn_init(c: int) -> Tuple[Params, Params]:
+    params = {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+    state = {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+    return params, state
+
+
+def bn_forward(
+    p: Params, s: Params, x: Array, *, train: bool, momentum: float = 0.9
+) -> Tuple[Array, Params]:
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_s = {
+            "mean": momentum * s["mean"] + (1 - momentum) * mean,
+            "var": momentum * s["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def max_pool(x: Array, window=2, stride=2) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID",
+    )
+
+
+def avg_pool(x: Array, window=2, stride=2) -> Array:
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID",
+    )
+    return s / (window * window)
+
+
+def global_avg_pool(x: Array) -> Array:
+    return jnp.mean(x, axis=(1, 2))

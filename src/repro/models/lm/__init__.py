@@ -1,0 +1,2 @@
+"""LM-family substrate: transformer/MoE/SSM/hybrid blocks with CADC-routable
+linears."""

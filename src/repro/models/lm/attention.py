@@ -1,0 +1,186 @@
+"""GQA/MQA attention: RoPE, global-causal / sliding-local / bidirectional,
+q-chunked blockwise softmax (bounded memory at 32k), KV-cache decode with
+rolling window for local layers.
+
+QKV/O projections route through layers.linear_apply, i.e. they are
+CADC-partitioned when the config says so. The QK^T and AV products are
+activation x activation — no weight crossbar — so CADC does not apply there
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import layers as ll
+from repro.parallel import act_sharding as sa
+
+Array = jnp.ndarray
+NEG_INF = -2.0 ** 30
+
+
+def attn_init(key, cfg: ArchConfig) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, k_, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = cfg.attn_qkv_bias
+    return {
+        "wq": ll.linear_init(kq, d, h * hd, cfg, bias=b),
+        "wk": ll.linear_init(kk, d, k_ * hd, cfg, bias=b),
+        "wv": ll.linear_init(kv, d, k_ * hd, cfg, bias=b),
+        "wo": ll.linear_init(ko, h * hd, d, cfg),
+    }
+
+
+def _softcap(scores: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _hshard(t: Array, cfg: ArchConfig) -> Array:
+    """Heads over the model axis (column-parallel QKV) when divisible;
+    GQA archs with kv < axis keep k/v replicated (the guard drops it)."""
+    return sa.shard_act(t, sa.U, sa.U, "model", sa.U,
+                        enabled=cfg.act_sharding)
+
+
+def _qkv(p, x, cfg: ArchConfig, positions: Array):
+    b, s, _ = x.shape
+    h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _hshard(ll.linear_apply(p["wq"], x, cfg).reshape(b, s, h, hd), cfg)
+    k = _hshard(ll.linear_apply(p["wk"], x, cfg).reshape(b, s, k_, hd), cfg)
+    v = _hshard(ll.linear_apply(p["wv"], x, cfg).reshape(b, s, k_, hd), cfg)
+    q = ll.rope(q, positions, cfg.rope_theta)
+    k = ll.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q [B,C,H,hd], k/v [B,L,K,hd], mask [B?,C,L] bool (True=keep)."""
+    bq, c, h, hd = q.shape
+    k_ = k.shape[2]
+    g = h // k_
+    qg = q.reshape(bq, c, k_, g, hd)
+    scores = jnp.einsum("bckgd,blkd->bkgcl", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = _softcap(scores * (hd ** -0.5), cfg.attn_logit_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgcl,blkd->bckgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(bq, c, h, hd).astype(q.dtype)
+
+
+def attention_train(
+    p: Dict, x: Array, cfg: ArchConfig, *, kind: str, positions: Array
+) -> Array:
+    """kind: 'global' (causal, or bidirectional for encoders) | 'local'
+    (causal sliding window). q is processed in cfg.attn_chunk chunks via
+    lax.scan — bounded score memory at 32k.
+    """
+    b, s, d = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk != 0:  # ragged tail: fall back to one chunk
+        chunk = s
+    n_chunks = s // chunk
+    w = cfg.local_window
+
+    # cfg.attn_unroll (audit mode): a lax.scan body is priced ONCE by XLA's
+    # cost analysis, so the roofline audit unrolls the q-chunk loop (same
+    # math/blocking — only the loop structure changes).
+    def _chunks(body):
+        if cfg.attn_unroll:
+            outs = [body(None, ci)[1] for ci in range(n_chunks)]
+            return jnp.stack(outs, axis=0)
+        _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+        return outs
+
+    if kind == "local" and s > w + chunk:
+        # keys restricted to a static window slice per q-chunk
+        def body(carry, ci):
+            q_c = jax.lax.dynamic_slice_in_dim(q, ci * chunk, chunk, axis=1)
+            start = jnp.maximum(ci * chunk - w, 0)
+            k_c = jax.lax.dynamic_slice_in_dim(k, start, w + chunk, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(v, start, w + chunk, axis=1)
+            qpos = ci * chunk + jnp.arange(chunk)
+            kpos = start + jnp.arange(w + chunk)
+            mask = (kpos[None, :] <= qpos[:, None]) & (
+                kpos[None, :] > qpos[:, None] - w
+            )
+            o = _sdpa(q_c, k_c, v_c, jnp.broadcast_to(mask, (b, chunk, w + chunk)),
+                      cfg)
+            return carry, o
+
+        out = jnp.moveaxis(_chunks(body), 0, 1).reshape(b, s, -1)
+    else:
+        def body(carry, ci):
+            q_c = jax.lax.dynamic_slice_in_dim(q, ci * chunk, chunk, axis=1)
+            qpos = ci * chunk + jnp.arange(chunk)
+            kpos = jnp.arange(s)
+            if cfg.is_encoder:
+                mask = jnp.ones((chunk, s), bool)
+            else:
+                mask = kpos[None, :] <= qpos[:, None]
+                if kind == "local":
+                    mask &= kpos[None, :] > qpos[:, None] - w
+            o = _sdpa(q_c, k, v, jnp.broadcast_to(mask, (b, chunk, s)), cfg)
+            return carry, o
+
+        out = jnp.moveaxis(_chunks(body), 0, 1).reshape(b, s, -1)
+
+    return ll.linear_apply(p["wo"], out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array  # [B, L, K, hd] — L = seq_len (global) or window (local)
+    v: Array
+
+
+def init_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
+               dtype) -> KVCache:
+    l = min(cfg.local_window, seq_len) if kind == "local" else seq_len
+    shape = (batch, l, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    p: Dict, x: Array, cfg: ArchConfig, *, kind: str, position: Array,
+    cache: KVCache,
+) -> Tuple[Array, KVCache]:
+    """One-token decode. x [B, 1, d]; position scalar int32 (current index).
+    Local layers use a rolling (mod-window) cache."""
+    b = x.shape[0]
+    h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ll.linear_apply(p["wq"], x, cfg).reshape(b, 1, h, hd)
+    k_new = ll.linear_apply(p["wk"], x, cfg).reshape(b, 1, k_, hd)
+    v_new = ll.linear_apply(p["wv"], x, cfg).reshape(b, 1, k_, hd)
+    pos = jnp.asarray(position, jnp.int32)
+    q = ll.rope(q, pos[None, None], cfg.rope_theta)
+    k_new = ll.rope(k_new, pos[None, None], cfg.rope_theta)
+
+    l = cache.k.shape[1]
+    slot = (pos % l) if kind == "local" else pos  # kind is static
+    k_c = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                              slot, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                              slot, axis=1)
+
+    idx = jnp.arange(l)
+    if kind == "local":
+        # rolling buffer: entry i holds absolute position p_i with
+        # p_i ≡ i (mod l) and p_i <= pos; valid iff pos - p_i < window
+        abs_pos = pos - ((pos - idx) % l)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.local_window)
+    else:
+        valid = idx <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, l))
+    out = _sdpa(q, k_c, v_c, mask, cfg).reshape(b, 1, -1)
+    return ll.linear_apply(p["wo"], out, cfg), KVCache(k_c, v_c)

@@ -1,0 +1,54 @@
+"""FFN blocks: SwiGLU / GeGLU / GELU, CADC-routable."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import layers as ll
+from repro.parallel import act_sharding as sa
+
+Array = jnp.ndarray
+
+
+def ffn_init(key, cfg: ArchConfig, d_ff: int = 0) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": ll.linear_init(k1, d, d_ff, cfg),
+            "w_up": ll.linear_init(k2, d, d_ff, cfg),
+            "w_down": ll.linear_init(k3, d_ff, d, cfg),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": ll.linear_init(k1, d, d_ff, cfg, bias=True),
+        "w_down": ll.linear_init(k2, d_ff, d, cfg, bias=True),
+    }
+
+
+def _tp(h: Array, cfg: ArchConfig) -> Array:
+    """Pin the d_ff dim to the model axis: column-parallel up/gate +
+    row-parallel down (§Perf iteration 1 — see parallel/act_sharding.py)."""
+    return sa.shard_act(h, *([sa.U] * (h.ndim - 1)), "model",
+                        enabled=cfg.act_sharding)
+
+
+def ffn_apply(p: Dict, x: Array, cfg: ArchConfig) -> Array:
+    if cfg.ffn_type == "swiglu":
+        g = jax.nn.silu(_tp(ll.linear_apply(p["w_gate"], x, cfg), cfg))
+        u = _tp(ll.linear_apply(p["w_up"], x, cfg), cfg)
+        return ll.linear_apply(p["w_down"], g * u, cfg)
+    if cfg.ffn_type == "geglu":
+        g = jax.nn.gelu(_tp(ll.linear_apply(p["w_gate"], x, cfg), cfg),
+                        approximate=True)
+        u = _tp(ll.linear_apply(p["w_up"], x, cfg), cfg)
+        return ll.linear_apply(p["w_down"], g * u, cfg)
+    if cfg.ffn_type == "gelu":
+        h = jax.nn.gelu(_tp(ll.linear_apply(p["w_up"], x, cfg), cfg),
+                        approximate=True)
+        return ll.linear_apply(p["w_down"], h, cfg)
+    raise ValueError(f"unknown ffn_type {cfg.ffn_type}")

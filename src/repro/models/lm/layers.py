@@ -1,0 +1,151 @@
+"""Shared LM layers: CADC-routable Linear, RMSNorm, embedding, RoPE.
+
+Linear weights are stored SEGMENTED ([S, xbar, d_out]) when
+cfg.linear_impl == 'cadc' so that the crossbar/segment axis is a real tensor
+axis the sharding rules can keep device-local (DESIGN.md §5): per-segment
+f() then never crosses a device boundary, and only the (linear) cross-segment
+sum participates in TP collectives.
+
+Params are fp32 (master copies); compute casts to cfg.dtype (bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import cadc as cadc_lib
+from repro.core import dendritic
+from repro.parallel import act_sharding as sa
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, cfg: ArchConfig, *,
+                bias: bool = False, scale: Optional[float] = None) -> Params:
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    if cfg.linear_impl == "cadc":
+        s = cadc_lib.num_segments(d_in, cfg.crossbar_size)
+        w_full = jax.random.normal(key, (s * cfg.crossbar_size, d_out),
+                                   jnp.float32) * std
+        # zero the padded rows (they see zero-padded activations anyway)
+        if s * cfg.crossbar_size > d_in:
+            w_full = w_full.at[d_in:].set(0.0)
+        p = {"w": w_full.reshape(s, cfg.crossbar_size, d_out)}
+    else:
+        p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear_apply(p: Params, x: Array, cfg: ArchConfig) -> Array:
+    """x [..., d_in] -> [..., d_out] through dense or CADC path.
+
+    bf16_wire (§Perf iter 2): psums/outputs stored in the compute dtype so
+    GSPMD's row-parallel all-reduces ride bf16 instead of f32 (the MXU
+    still accumulates in fp32 internally; the cross-chip partial-sum add
+    gains one bf16 rounding per shard — far tighter than the 4-5 bit ADC
+    psums of the paper's macro)."""
+    w = p["w"]
+    acc = cdtype(cfg) if cfg.bf16_wire else jnp.float32
+    if w.ndim == 3:  # segmented CADC weight [S, xbar, d_out]
+        s, xbar, d_out = w.shape
+        xp = cadc_lib.pad_to_segments(x, -1, xbar)
+        xs = xp.reshape(*x.shape[:-1], s, xbar).astype(cdtype(cfg))
+        f = dendritic.get(cfg.dendritic_fn)
+        psums = jnp.einsum(
+            "...sk,skn->...sn", xs, w.astype(cdtype(cfg)),
+            preferred_element_type=acc,
+        )
+        y = jnp.sum(f(psums.astype(jnp.float32)), axis=-2).astype(cdtype(cfg))
+    else:
+        y = jnp.einsum(
+            "...k,kn->...n", x.astype(cdtype(cfg)), w.astype(cdtype(cfg)),
+            preferred_element_type=acc,
+        ).astype(cdtype(cfg))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1 + scale)
+
+
+def rmsnorm_apply(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p: Params, tokens: Array, cfg: ArchConfig) -> Array:
+    x = jnp.take(p["table"].astype(cdtype(cfg)), tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), cdtype(cfg))
+    return x
+
+
+def lm_head(p_head: Params, p_emb: Params, x: Array, cfg: ArchConfig) -> Array:
+    """Logits in fp32 (loss numerics). Tied: x @ table^T. The table/head
+    carry cfg.padded_vocab rows (Megatron-style TP alignment); logits are
+    sliced back to the logical vocab so losses/argmax never see padding."""
+    if cfg.tie_embeddings:
+        table = p_emb["table"].astype(cdtype(cfg))
+        logits = jnp.einsum("...d,vd->...v", x, table,
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = linear_apply(p_head, x, cfg).astype(jnp.float32)
+    # vocab-parallel logits: the loss' logsumexp reduces the sharded dim
+    # with a tiny AR instead of gathering [*, V] fp32 (§Perf iter 1)
+    logits = sa.shard_act(logits, *([sa.U] * (logits.ndim - 1)), "model",
+                          enabled=cfg.act_sharding)
+    if logits.shape[-1] != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x [..., S, H, hd], positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

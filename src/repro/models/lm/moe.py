@@ -1,0 +1,151 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the TPU-friendly sort formulation (no [T, E, C] one-hot):
+  1. top-k expert ids per token -> flat (token, expert) pairs
+  2. stable-sort pairs by expert
+  3. position-within-expert via searchsorted; drop beyond capacity C
+  4. scatter into a dense [E, C, d] buffer -> batched expert GEMMs
+  5. gather back + weighted combine (scatter-add over tokens)
+
+Under expert parallelism the [E, C, d] buffer is sharded on E over the
+'model' axis; GSPMD lowers the scatter/gather to an all-to-all pair —
+exactly the MoE dispatch collective a hand-written implementation would use.
+
+Experts use SwiGLU; expert weights route through the CADC segmented layout
+when cfg.linear_impl == 'cadc' (the paper's technique applies per expert
+crossbar bank). Router stays fp32/dense (tiny, accuracy-critical).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import cadc as cadc_lib
+from repro.core import dendritic
+from repro.models.lm import ffn as ffn_lib
+from repro.models.lm import layers as ll
+from repro.parallel import act_sharding as sa
+
+Array = jnp.ndarray
+
+
+def _expert_linear_init(key, n_e: int, d_in: int, d_out: int, cfg: ArchConfig):
+    std = 1.0 / jnp.sqrt(d_in)
+    if cfg.linear_impl == "cadc":
+        s = cadc_lib.num_segments(d_in, cfg.crossbar_size)
+        w = jax.random.normal(
+            key, (n_e, s * cfg.crossbar_size, d_out), jnp.float32) * std
+        if s * cfg.crossbar_size > d_in:
+            w = w.at[:, d_in:].set(0.0)
+        return w.reshape(n_e, s, cfg.crossbar_size, d_out)
+    return jax.random.normal(key, (n_e, d_in, d_out), jnp.float32) * std
+
+
+def _expert_linear(w: Array, x: Array, cfg: ArchConfig) -> Array:
+    """w [E, d_in, d_out] or [E, S, xbar, d_out]; x [E, C, d_in]."""
+    dt = ll.cdtype(cfg)
+    if w.ndim == 4:  # CADC segmented
+        e, s, xbar, d_out = w.shape
+        xp = cadc_lib.pad_to_segments(x, -1, xbar)
+        xs = xp.reshape(*x.shape[:-1], s, xbar).astype(dt)
+        f = dendritic.get(cfg.dendritic_fn)
+        psums = jnp.einsum("ecsk,eskn->ecsn", xs, w.astype(dt),
+                           preferred_element_type=jnp.float32)
+        return jnp.sum(f(psums), axis=-2).astype(dt)
+    return jnp.einsum("ecd,edn->ecn", x.astype(dt), w.astype(dt),
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+def moe_init(key, cfg: ArchConfig) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    p = {
+        "router": jax.random.normal(keys[0], (d, m.n_experts), jnp.float32)
+        * (d ** -0.5),
+        "w_gate": _expert_linear_init(keys[1], m.n_experts, d, m.d_expert, cfg),
+        "w_up": _expert_linear_init(keys[2], m.n_experts, d, m.d_expert, cfg),
+        "w_down": _expert_linear_init(keys[3], m.n_experts, m.d_expert, d, cfg),
+    }
+    if m.n_shared > 0:
+        shared_cfg = cfg.with_overrides(ffn_type="swiglu")
+        p["shared"] = ffn_lib.ffn_init(keys[4], shared_cfg, d_ff=m.d_shared)
+        p["shared_gate"] = jax.random.normal(keys[5], (d, 1), jnp.float32) * 0.02
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # multiple of 8, >= 8
+
+
+def moe_apply(p: Dict, x: Array, cfg: ArchConfig) -> Tuple[Array, Array]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    m = cfg.moe
+    b, s_, d = x.shape
+    t = b * s_
+    tokens = x.reshape(t, d)
+
+    logits = (tokens.astype(jnp.float32) @ p["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)          # [T, k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalize
+
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, m.n_experts), axis=1), axis=0
+    )
+    p_e = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e)
+
+    # ---- sort-based dispatch ----
+    c = capacity(t, cfg)
+    flat_e = top_e.reshape(-1)                          # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), m.top_k)         # token of each pair
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(t * m.top_k) - first               # position within expert
+    keep = pos < c
+    # OOB sentinel = buffer size (E*c): stays in int32 range even at
+    # 1M-token batches (t*k*c would overflow int32 there).
+    dest = jnp.where(keep, se * c + pos, m.n_experts * c)  # OOB -> dropped
+
+    buf = jnp.zeros((m.n_experts * c, d), ll.cdtype(cfg))
+    buf = buf.at[dest].set(tokens[st_].astype(buf.dtype), mode="drop")
+    ein = buf.reshape(m.n_experts, c, d)
+
+    # EP when E divides the model axis, else expert-TP on the hidden dim:
+    # pins GSPMD to sharded expert compute instead of gathering expert
+    # weights (§Perf iter 1). Mirrors the param rules in parallel/sharding.
+    ax = sa.current_axis_sizes().get("model", 1)
+    ep_ok = ax > 1 and m.n_experts % ax == 0
+
+    def _etp(t):
+        if ep_ok:
+            return sa.shard_act(t, "model", sa.U, sa.U,
+                                enabled=cfg.act_sharding)
+        return sa.shard_act(t, sa.U, sa.U, "model", enabled=cfg.act_sharding)
+
+    g = jax.nn.silu(_etp(_expert_linear(p["w_gate"], ein, cfg)))
+    u = _etp(_expert_linear(p["w_up"], ein, cfg))
+    eout = _expert_linear(p["w_down"], g * u, cfg)      # [E, C, d]
+
+    gathered = eout.reshape(m.n_experts * c, d).at[dest].get(
+        mode="fill", fill_value=0.0
+    )                                                    # [T*k, d], dropped=0
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[st_].add(gathered.astype(jnp.float32) * sw[:, None])
+
+    if m.n_shared > 0:
+        shared_cfg = cfg.with_overrides(ffn_type="swiglu")
+        sh = ffn_lib.ffn_apply(p["shared"], tokens, shared_cfg)
+        gate = jax.nn.sigmoid(tokens.astype(jnp.float32) @ p["shared_gate"])
+        y = y + sh.astype(jnp.float32) * gate
+
+    return y.reshape(b, s_, d).astype(x.dtype), aux

@@ -1,0 +1,95 @@
+"""Griffin / RecurrentGemma recurrent block [arXiv:2402.19427].
+
+RG-LRU: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t input-dependent sigmoids.
+The recurrence is DIAGONAL, so training uses jax.lax.associative_scan
+(O(log T) depth) — the TPU-native formulation of the paper's linear scan.
+Decode carries (h, conv buffer).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import layers as ll
+from repro.models.lm.xlstm import _causal_conv1d, _causal_conv1d_init, _conv1d_step
+
+Array = jnp.ndarray
+C_RGLRU = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array      # [B, rnn_width]
+    conv: Array   # [B, width-1, rnn_width]
+
+
+def rglru_init(key, cfg: ArchConfig) -> Dict:
+    d, rw = cfg.d_model, cfg.rnn_width or cfg.d_model
+    keys = jax.random.split(key, 7)
+    # Lambda init such that a = exp(-c*softplus(L)*r) lands in [0.9, 0.999]
+    # at r=0.5: softplus(L) in [-ln(.999)*2/c, -ln(.9)*2/c]
+    lo, hi = -jnp.log(0.999) * 2 / C_RGLRU, -jnp.log(0.9) * 2 / C_RGLRU
+    sp = jax.random.uniform(keys[0], (rw,), jnp.float32, lo, hi)
+    lam = jnp.log(jnp.expm1(sp))  # inverse softplus
+    return {
+        "w_x": ll.linear_init(keys[1], d, rw, cfg),
+        "w_gate": ll.linear_init(keys[2], d, rw, cfg),
+        "conv": _causal_conv1d_init(keys[3], cfg.conv1d_width, rw),
+        "w_r": ll.linear_init(keys[4], rw, rw, cfg, bias=True),
+        "w_i": ll.linear_init(keys[5], rw, rw, cfg, bias=True),
+        "lam": lam,
+        "w_out": ll.linear_init(keys[6], rw, d, cfg),
+    }
+
+
+def _rglru_coeffs(p: Dict, u: Array, cfg: ArchConfig):
+    """u: conv output [..., rw] -> (a, b) of the diagonal recurrence."""
+    r = jax.nn.sigmoid(ll.linear_apply(p["w_r"], u, cfg).astype(jnp.float32))
+    i = jax.nn.sigmoid(ll.linear_apply(p["w_i"], u, cfg).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_apply(p: Dict, x: Array, cfg: ArchConfig) -> Array:
+    """x [B, S, d] -> [B, S, d], associative scan over S."""
+    xg = jax.nn.gelu(ll.linear_apply(p["w_gate"], x, cfg), approximate=True)
+    xi = ll.linear_apply(p["w_x"], x, cfg)
+    u = _causal_conv1d(p["conv"], xi)
+    a, b = _rglru_coeffs(p, u, cfg)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * xg)
+    return ll.linear_apply(p["w_out"], y, cfg)
+
+
+def rglru_init_state(cfg: ArchConfig, batch: int) -> RGLRUState:
+    rw = cfg.rnn_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, rw), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, rw), jnp.float32),
+    )
+
+
+def rglru_decode(p: Dict, x: Array, cfg: ArchConfig,
+                 state: RGLRUState) -> Tuple[Array, RGLRUState]:
+    b, _, d = x.shape
+    xg = jax.nn.gelu(ll.linear_apply(p["w_gate"], x[:, 0], cfg), approximate=True)
+    xi = ll.linear_apply(p["w_x"], x[:, 0], cfg)
+    u, new_buf = _conv1d_step(p["conv"], state.conv.astype(xi.dtype), xi)
+    a, bterm = _rglru_coeffs(p, u, cfg)
+    h = a * state.h + bterm
+    y = (h.astype(x.dtype) * xg)
+    y = ll.linear_apply(p["w_out"], y, cfg)[:, None, :]
+    return y, RGLRUState(h, new_buf.astype(jnp.float32))

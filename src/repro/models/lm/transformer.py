@@ -1,0 +1,307 @@
+"""The LM stack: embedding -> pattern-cycled blocks -> norm -> head.
+
+Layer layout: cfg.pattern (e.g. 5x local + 1 global for gemma3; 2x rglru +
+local for recurrentgemma; 7x mlstm + slstm for xlstm) defines a repeating
+UNIT. Parameters for each pattern position are stacked over the R unit
+repeats and the stack runs as ONE jax.lax.scan over R — the traced HLO holds
+a single unit regardless of depth (56-layer mixtral compiles as fast as a
+2-layer smoke config). Remainder layers (n_layers % len(pattern)) are traced
+inline.
+
+Train path returns fp32 logits (+ MoE aux loss); decode path threads
+per-layer caches (KV / recurrent states) through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel import act_sharding as sa
+from repro.models.lm import attention as attn
+from repro.models.lm import ffn as ffn_lib
+from repro.models.lm import layers as ll
+from repro.models.lm import moe as moe_lib
+from repro.models.lm import rglru as rglru_lib
+from repro.models.lm import xlstm as xlstm_lib
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, kind: str, cfg: ArchConfig) -> Params:
+    if kind in ("global", "local"):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": ll.rmsnorm_init(cfg.d_model),
+            "attn": attn.attn_init(k1, cfg),
+            "ln2": ll.rmsnorm_init(cfg.d_model),
+        }
+        if cfg.moe.n_experts > 0:
+            p["moe"] = moe_lib.moe_init(k2, cfg)
+        elif cfg.ffn_type != "none":
+            p["ffn"] = ffn_lib.ffn_init(k2, cfg)
+        return p
+    if kind == "mlstm":
+        return {"block": xlstm_lib.mlstm_init(key, cfg)}
+    if kind == "slstm":
+        return {"block": xlstm_lib.slstm_init(key, cfg)}
+    if kind == "rglru":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": ll.rmsnorm_init(cfg.d_model),
+            "rec": rglru_lib.rglru_init(k1, cfg),
+            "ln2": ll.rmsnorm_init(cfg.d_model),
+            "ffn": ffn_lib.ffn_init(k2, cfg),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _seq_shard(x: Array, cfg: ArchConfig) -> Array:
+    """Megatron-SP (§Perf iter 4): residual stream [B,S,d] seq-sharded over
+    'model' between blocks; GSPMD's ar+slice->reduce-scatter rewrite turns
+    the row-parallel ARs into RS and inserts AGs at the matmul boundaries."""
+    return sa.shard_act(x, sa.U, "model", sa.U,
+                        enabled=cfg.act_sharding and cfg.seq_sharding)
+
+
+def _layer_train(p: Params, x: Array, kind: str, cfg: ArchConfig,
+                 positions: Array) -> Tuple[Array, Array]:
+    """returns (x, aux_loss)."""
+    x = _seq_shard(x, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("global", "local"):
+        h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        x = x + attn.attention_train(p["attn"], h, cfg, kind=kind,
+                                     positions=positions)
+        h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.moe.n_experts > 0:
+            y, aux = moe_lib.moe_apply(p["moe"], h, cfg)
+            x = x + y
+        elif cfg.ffn_type != "none":
+            x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
+        return x, aux
+    if kind == "mlstm":
+        return x + xlstm_lib.mlstm_apply(p["block"], x, cfg), aux
+    if kind == "slstm":
+        return x + xlstm_lib.slstm_apply(p["block"], x, cfg), aux
+    if kind == "rglru":
+        h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        x = x + rglru_lib.rglru_apply(p["rec"], h, cfg)
+        h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
+        return x, aux
+    raise ValueError(kind)
+
+
+def _layer_decode(p: Params, x: Array, kind: str, cfg: ArchConfig,
+                  position: Array, cache):
+    if kind in ("global", "local"):
+        h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        y, cache = attn.attention_decode(p["attn"], h, cfg, kind=kind,
+                                         position=position, cache=cache)
+        x = x + y
+        h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.moe.n_experts > 0:
+            y, _ = moe_lib.moe_apply(p["moe"], h, cfg)
+            x = x + y
+        elif cfg.ffn_type != "none":
+            x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
+        return x, cache
+    if kind == "mlstm":
+        y, cache = xlstm_lib.mlstm_decode(p["block"], x, cfg, cache)
+        return x + y, cache
+    if kind == "slstm":
+        y, cache = xlstm_lib.slstm_decode(p["block"], x, cfg, cache)
+        return x + y, cache
+    if kind == "rglru":
+        h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+        y, cache = rglru_lib.rglru_decode(p["rec"], h, cfg, cache)
+        x = x + y
+        h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
+        return x, cache
+    raise ValueError(kind)
+
+
+def _init_layer_cache(kind: str, cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype):
+    if kind in ("global", "local"):
+        return attn.init_cache(cfg, kind, batch, seq_len, dtype)
+    if kind == "mlstm":
+        return xlstm_lib.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_lib.slstm_init_state(cfg, batch)
+    if kind == "rglru":
+        return rglru_lib.rglru_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack layout
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    p = len(cfg.pattern)
+    reps = cfg.n_layers // p if cfg.scan_layers else 0
+    tail = cfg.pattern_for_layers[reps * p :]
+    return reps, cfg.pattern, tail
+
+
+def init(key, cfg: ArchConfig) -> Params:
+    reps, pattern, tail = _layout(cfg)
+    keys = jax.random.split(key, 4)
+    params: Params = {
+        "embed": ll.embedding_init(keys[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": ll.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = ll.linear_init(keys[1], cfg.d_model, cfg.padded_vocab,
+                                        cfg)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = ll.linear_init(
+            keys[2], cfg.frontend_dim, cfg.d_model, cfg, bias=True
+        )
+
+    lkeys = jax.random.split(keys[3], max(reps, 1) * len(pattern) + len(tail))
+    if reps > 0:
+        units = []
+        for j, kind in enumerate(pattern):
+            ks = jnp.stack([lkeys[r * len(pattern) + j] for r in range(reps)])
+            units.append(jax.vmap(lambda k: _layer_init(k, kind, cfg))(ks))
+        params["units"] = tuple(units)
+    params["tail"] = tuple(
+        _layer_init(lkeys[reps * len(pattern) + i], kind, cfg)
+        for i, kind in enumerate(tail)
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding frontends
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, batch: Dict[str, Array], cfg: ArchConfig) -> Array:
+    if cfg.frontend == "audio":
+        return ll.linear_apply(params["frontend_proj"], batch["frames"], cfg)
+    x = ll.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "vit":
+        patches = ll.linear_apply(params["frontend_proj"], batch["patches"], cfg)
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, patches.shape[1]:]],
+                            axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, batch: Dict[str, Array],
+                  cfg: ArchConfig) -> Tuple[Array, Array]:
+    """batch: {'tokens': [B,S]} (+ 'patches'/'frames' per frontend).
+    Returns (logits fp32 [B,S,V], aux_loss)."""
+    reps, pattern, tail = _layout(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def unit_body(carry, unit_params):
+        x, aux = carry
+        for j, kind in enumerate(pattern):
+            x, a = _layer_train(unit_params[j], x, kind, cfg, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        unit_body = jax.checkpoint(unit_body, prevent_cse=False)
+
+    aux = jnp.zeros((), jnp.float32)
+    if reps > 0:
+        (x, aux), _ = jax.lax.scan(unit_body, (x, aux), params["units"])
+    for i, kind in enumerate(tail):
+        x, a = _layer_train(params["tail"][i], x, kind, cfg, positions)
+        aux = aux + a
+
+    x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = ll.lm_head(params.get("head"), params["embed"], x, cfg)
+    return logits, aux
+
+
+def lm_loss(logits: Array, labels: Array, *, z_loss: float = 1e-4
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """Causal LM CE (+ z-loss). labels [B, S] int32; -1 = masked."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll_ = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                              axis=-1)[..., 0]
+    ce = (lse - ll_) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (ce + zl).sum() / denom
+    return loss, {"ce": ce.sum() / denom,
+                  "acc": ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+    """Stacked caches per pattern position (+ per tail layer)."""
+    dtype = dtype or ll.cdtype(cfg)
+    reps, pattern, tail = _layout(cfg)
+
+    def stack(kind):
+        one = _init_layer_cache(kind, cfg, batch, seq_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (reps, *a.shape)).copy(), one
+        )
+
+    units = tuple(stack(kind) for kind in pattern) if reps > 0 else ()
+    tails = tuple(
+        _init_layer_cache(kind, cfg, batch, seq_len, dtype) for kind in tail
+    )
+    return {"units": units, "tail": tails}
+
+
+def decode_step(params: Params, tokens: Array, position: Array, caches,
+                cfg: ArchConfig) -> Tuple[Array, Any]:
+    """One decode step: tokens [B] int32 -> logits [B, V], new caches."""
+    reps, pattern, tail = _layout(cfg)
+    x = ll.embed(params["embed"], tokens[:, None], cfg)
+
+    def unit_body(x, scanned):
+        unit_params, unit_caches = scanned
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            x, c = _layer_decode(unit_params[j], x, kind, cfg, position,
+                                 unit_caches[j])
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if reps > 0:
+        x, new_unit_caches = jax.lax.scan(
+            unit_body, x, (params["units"], caches["units"])
+        )
+    else:
+        new_unit_caches = ()
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        x, c = _layer_decode(params["tail"][i], x, kind, cfg, position,
+                             caches["tail"][i])
+        new_tail.append(c)
+
+    x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = ll.lm_head(params.get("head"), params["embed"], x, cfg)
+    return logits[:, 0], {"units": new_unit_caches, "tail": tuple(new_tail)}
+
+
+def param_count(params: Params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,70 @@
+"""Activation sharding constraints (Megatron-style tensor parallelism).
+
+§Perf iteration 1 (EXPERIMENTS.md): GSPMD left the 16-way `model` axis idle
+during compute — with only parameter shardings as constraints it chose
+"gather weights, compute data-parallel", so per-chip FLOPs were global/16
+instead of global/256. Pinning the TP dim of a few key activations flips
+the matmul strategies to column/row-parallel:
+
+    FFN hidden   [..., d_ff]        -> P(U, ..., 'model')
+    q/k/v        [B, S, H, hd]      -> heads over 'model' (when divisible)
+    logits       [B, S, V_padded]   -> vocab over 'model'
+    MoE expert hidden [E, C, d_e]   -> d_e over 'model' (expert-TP mode)
+
+All other dims stay UNCONSTRAINED (GSPMD keeps the propagated batch/seq
+sharding). Constraints are no-ops outside a mesh context (bare model tests)
+or when the dim doesn't divide the axis (gemma3's 4 heads on a 16-way axis:
+the FFN constraint still applies, attention stays DP)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax._src import mesh as _mesh_src
+from jax.sharding import PartitionSpec as P
+
+Array = jnp.ndarray
+U = P.UNCONSTRAINED
+AxisEntry = Union[None, str, Tuple[str, ...], type(U)]
+
+
+def current_axis_sizes() -> dict:
+    """Axis sizes of the ambient `with mesh:` context ({} when absent)."""
+    env = _mesh_src.thread_resources.env
+    m = env.physical_mesh
+    if m.empty:
+        return {}
+    return dict(zip(m.axis_names, m.devices.shape))
+
+
+def shard_act(x: Array, *axes: AxisEntry, enabled: bool = True) -> Array:
+    """with_sharding_constraint(x, P(*axes)) with divisibility/mesh guards.
+
+    `axes` length must equal x.ndim; entries: U (unconstrained), None
+    (replicated), or a mesh axis name. Named entries are dropped (-> U)
+    when the axis is missing from the ambient mesh or the dim does not
+    divide it; the whole call is a no-op without a mesh context.
+    """
+    if not enabled:
+        return x
+    sizes = current_axis_sizes()
+    if not sizes:
+        return x
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None or a is U:
+            spec.append(a)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        total = 1
+        ok = True
+        for n in names:
+            if n not in sizes:
+                ok = False
+                break
+            total *= sizes[n]
+        spec.append(a if ok and total > 1 and dim % total == 0 else U)
+    if all(s is U for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,237 @@
+"""Per-architecture sharding rules (DP + FSDP + TP + EP, SP-ready).
+
+Name-based rules over the params pytree. Scheme (single-pod ('data','model');
+multi-pod prepends 'pod' to the DP group):
+
+  * column-parallel weights (QKV, up/gate projections): contraction dim
+    FSDP-sharded over 'data' (gathered just-in-time per scan step — ZeRO-3),
+    output dim TP-sharded over 'model'.
+  * row-parallel weights (O, down projections): contraction dim over
+    'model' (the TP all-reduce), output dim FSDP over 'data'.
+  * CADC segmented weights [S, xbar, N]: the SEGMENT axis takes the place of
+    the contraction dim; the xbar axis is NEVER sharded — a crossbar never
+    spans devices, so the dendritic f() needs no collective and only the
+    (linear) cross-segment sum enters the TP all-reduce. This is the paper's
+    psum-locality property as a sharding invariant (DESIGN.md §5).
+  * MoE experts: EP — expert axis over 'model'; dispatch buffers constrained
+    to match, which lowers token routing to all-to-all style collectives.
+  * xLSTM blocks: FSDP/DP only (4 heads < model axis; TP of the matrix
+    memory is a §Perf item, see EXPERIMENTS.md).
+  * optimizer state inherits the param sharding (fully-sharded Adam).
+
+Elasticity: rules are pure functions of (path, shape, mesh) — a checkpoint
+saved under one mesh restores under any other by re-running the rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch import mesh as mesh_lib
+
+# key names -> role
+_COLUMN = {"wq", "wk", "wv", "w_up", "w_gate", "w_up_gate", "w_x", "w_if",
+           "w_gates", "w_q", "w_k", "w_v", "w_r", "w_i"}
+_ROW = {"wo", "w_down", "w_out"}
+_REPLICATED = {"scale", "b", "lam", "r_gates", "router", "shared_gate"}
+_EXPERT = {"w_gate", "w_up", "w_down"}  # when under a 'moe' subtree
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(f"[{e.idx}]")
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            # NamedTuple fields (KVCache.k/.v, recurrent states) — str(e)
+            # is '.k', which silently missed the name-keyed rules and left
+            # KV caches batch-sharded only (§Perf iter 8).
+            names.append(str(e.name))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+def _spec_for(names: Tuple[str, ...], ndim: int, cfg: ArchConfig,
+              dp: Tuple[str, ...], in_xlstm_block: bool,
+              model_size: int) -> P:
+    """ndim counts WITHOUT the leading scan-stack axis (caller strips it)."""
+    leaf = names[-1]
+    # linear_init nests weights as {'wq': {'w': ...}} — the ROLE lives one
+    # level up. Without this, every nested dense linear fell through to
+    # replicate (gemma_7b: 93 GB/chip — §Perf iter 7).
+    if leaf == "w" and len(names) >= 2:
+        leaf = names[-2]
+    under_moe = "moe" in names
+    fsdp = dp[-1]  # 'data'
+
+    if leaf in ("table",):  # embedding [V, d] — V is cfg.padded_vocab
+        return P("model", None)
+    if leaf == "lam" or leaf == "scale":
+        return P(None)
+    if leaf == "b":
+        return P(None)
+    if leaf == "router" or leaf == "shared_gate":
+        return P(None, None)
+    if leaf == "r_gates":  # sLSTM [4, H, dh, dh] — small, replicate
+        return P(*([None] * ndim))
+
+    if under_moe and leaf in _EXPERT and ndim >= 3:
+        # EP when the expert count divides the model axis; otherwise
+        # within-expert TP (Megatron-style, expert-sliced): gate/up are
+        # column-parallel, down is row-parallel. This keeps mixtral (E=8)
+        # and qwen2-moe (E=60) shardable on a 16-way model axis.
+        ep_ok = cfg.moe.n_experts % model_size == 0
+        is_down = leaf == "w_down"
+        if ndim == 3:   # [E, d_in, d_out]
+            if ep_ok:
+                return P("model", fsdp, None)
+            return P(None, "model", fsdp) if is_down else P(None, fsdp, "model")
+        # CADC segmented [E, S, xbar, d_out]: crossbars never span devices.
+        if ep_ok:
+            return P("model", fsdp, None, None)
+        return (P(None, "model", None, fsdp) if is_down
+                else P(None, fsdp, None, "model"))
+
+    if in_xlstm_block:
+        if leaf == "conv" or "conv" in names:
+            # depthwise causal conv1d [width, d_inner]: width is tiny —
+            # shard channels only.
+            return P(None, fsdp)
+        # FSDP-only: no model axis (head count < axis size)
+        if ndim == 2:
+            return P(fsdp, None)
+        if ndim == 3:  # CADC segmented
+            return P(fsdp, None, None)
+        return P(*([None] * ndim))
+
+    if leaf in _COLUMN:
+        if ndim == 2:   # [d_in, d_out]
+            return P(fsdp, "model")
+        if ndim == 3:   # CADC [S, xbar, d_out]
+            return P(fsdp, None, "model")
+    if leaf in _ROW:
+        if ndim == 2:   # [d_in, d_out]
+            return P("model", fsdp)
+        if ndim == 3:   # CADC [S, xbar, d_out]: segments over model
+            return P("model", None, fsdp)
+    if ndim == 2 and "conv" in names:
+        return P(None, "model")  # depthwise conv over TP-sharded channels
+
+    # head / frontend projections
+    if "head" in names:
+        if ndim == 2:
+            return P(fsdp, "model")
+        if ndim == 3:
+            return P(fsdp, None, "model")
+    if "frontend_proj" in names:
+        return P(*([None] * ndim))
+
+    return P(*([None] * ndim))
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _guard_divisible(spec: P, shape: Tuple[int, ...], sizes: Dict[str, int]) -> P:
+    """Elasticity guard: drop any sharded dim the tensor doesn't divide.
+    Keeps odd dims (segment counts, tiny widths) compilable on any mesh at
+    the cost of replicating that dim — the production fallback."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(entry if shape[i] % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(params_shape: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching `params_shape` (a ShapeDtypeStruct or
+    array pytree). Scan-stacked leaves (under 'units') get a leading None."""
+    dp = mesh_lib.data_axes(mesh)
+    sizes = _axis_sizes(mesh)
+    model_size = sizes.get("model", 1)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        stacked = "units" in names
+        ndim = leaf.ndim - (1 if stacked else 0)
+        in_xl = "block" in names  # xlstm m/s blocks live under 'block'
+        spec = _spec_for(names, ndim, cfg, dp, in_xl, model_size)
+        if stacked:
+            spec = P(None, *spec)
+        return _guard_divisible(spec, leaf.shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, kind: str) -> Dict[str, P]:
+    dp = mesh_lib.data_axes(mesh)
+    if cfg.frontend == "audio":
+        specs = {"frames": P(dp, None, None)}
+    else:
+        specs = {"tokens": P(dp, None)}
+        if cfg.frontend == "vit":
+            specs["patches"] = P(dp, None, None)
+    if kind == "train":
+        specs["labels"] = P(dp, None)
+    return specs
+
+
+def activation_spec(cfg: ArchConfig, mesh: Mesh) -> P:
+    dp = mesh_lib.data_axes(mesh)
+    return P(dp, None, None)
+
+
+def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh,
+                batch: int) -> Any:
+    """KV caches: batch over DP when divisible; kv-heads over 'model' when
+    divisible, else the cache LENGTH dim over 'model' (flash-decoding-
+    style length-parallel attention — the production fallback for GQA
+    archs whose kv-head count is below the TP degree, §Perf iter 8).
+    Recurrent states follow batch."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_lib.axis_size(mesh, a)
+    model = mesh_lib.axis_size(mesh, "model")
+    b_ax = dp if batch % dp_size == 0 and batch >= dp_size else None
+    h_ax = "model" if cfg.n_kv_heads % model == 0 else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        stacked = "units" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        if names[-1] in ("k", "v") and nd == 4:      # [B, L, K, hd]
+            cache_len = leaf.shape[2 if stacked else 1]
+            l_ax = ("model" if h_ax is None and cache_len % model == 0
+                    else None)
+            spec = P(b_ax, l_ax, h_ax, None)
+        elif nd >= 1:
+            spec = P(b_ax, *([None] * (nd - 1)))     # recurrent states [B, ...]
+        else:
+            spec = P()
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,89 @@
+"""Ternary weight store: the paper's 2-bit crossbar codes as a wire format.
+
+The CADC macro stores weights as ternary codes (twin-9T bitcell, Fig. 3b);
+the 4/2/4b system of Table II never moves fp weights at all. This module
+brings that to the distributed serving path: weights live SHARDED as int8
+codes {-1,0,+1} plus one fp32 scale per output column, so every FSDP
+all-gather moves **1 byte/param instead of 4 (or 2)** — and int8 survives
+the CPU backend's float normalization, so the dry-run measures the win
+natively (unlike the bf16-wire correction).
+
+Least-squares per-column scale: alpha_j = <|w_j| restricted to nonzero
+codes> minimizes ||w_j - alpha_j c_j||^2 for fixed codes.
+
+Serving accuracy: the paper's own networks RUN on these codes (Table I/II
+train WITH ternary weights); for pretrained fp checkpoints this is the
+W2 post-training quantization of the paper's datapath. Tests bound the
+matmul error and verify the int8 all-gather in the compiled HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import ternary_codes
+
+Array = jnp.ndarray
+
+
+def encode(w: Array) -> Dict[str, Array]:
+    """[D, N] fp -> {'codes': int8 [D, N], 'scale': fp32 [N]}."""
+    codes = ternary_codes(w)
+    nz = (codes != 0).astype(jnp.float32)
+    num = jnp.sum(jnp.abs(w) * nz, axis=0)
+    den = jnp.maximum(jnp.sum(nz, axis=0), 1.0)
+    return {"codes": codes, "scale": (num / den).astype(jnp.float32)}
+
+
+def decode(t: Dict[str, Array], dtype=jnp.bfloat16) -> Array:
+    return (t["codes"].astype(jnp.float32) * t["scale"][None, :]).astype(dtype)
+
+
+def ternary_linear(x: Array, t: Dict[str, Array],
+                   *, gather_codes: bool = False) -> Array:
+    """x [..., D] @ (alpha * codes). The scale multiplies the fp32 psum —
+    one mul per output, exactly the IMA's reference-scale step.
+
+    gather_codes=True pins the FSDP execution to "gather the int8 codes,
+    compute locally" — the all-gather moves 1 B/param (GSPMD's default for
+    contraction-sharded weights is to all-reduce fp32 partial outputs,
+    which is 4 B x tokens and loses badly at production batch sizes;
+    expressing the gather explicitly is how ZeRO-3 frameworks do it)."""
+    codes = t["codes"]
+    if gather_codes:
+        codes = jax.lax.with_sharding_constraint(
+            codes, jax.sharding.PartitionSpec(None, None))
+    psum = jnp.einsum(
+        "...k,kn->...n", x.astype(jnp.float32),
+        codes.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return (psum * t["scale"]).astype(x.dtype)
+
+
+def encode_tree(params, *, min_size: int = 1 << 16):
+    """Encode every 2-D fp leaf named 'w' above min_size elements (serving
+    checkpoint transform); others pass through. Returns (tree, n_encoded)."""
+    n = 0
+
+    def enc(path, leaf):
+        nonlocal n
+        names = [str(getattr(e, "key", e)) for e in path]
+        if (names and names[-1] == "w" and leaf.ndim == 2
+                and leaf.size >= min_size
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            n += 1
+            return encode(leaf)
+        return leaf
+
+    tree = jax.tree_util.tree_map_with_path(enc, params)
+    return tree, n
+
+
+def relative_error(w: Array) -> float:
+    """||w - dec(enc(w))|| / ||w|| — the W2 quantization noise."""
+    t = encode(w)
+    return float(jnp.linalg.norm(w - decode(t, jnp.float32).astype(w.dtype))
+                 / jnp.linalg.norm(w))

@@ -1,0 +1,1 @@
+from repro.train.optimizer import adamw, apply_updates, clip_by_global_norm, sgd

@@ -1,0 +1,161 @@
+"""Training loop with checkpoint/restart for the CNN (paper) models.
+
+The LM-scale distributed loop lives in launch/train.py; this one is the
+single-host reference loop used by the paper-replication benchmarks — same
+checkpoint substrate, same data contract (batch = f(seed, step), so a
+restart resumes bit-exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import ckpt
+from repro.models.common import Ctx, LayerMode
+from repro.train import optimizer as opt_lib
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    batch_size: int = 64
+    eval_every: int = 50
+    eval_batches: int = 4
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_k: int = 2
+    seed: int = 0
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def make_train_step(
+    apply_fn: Callable,
+    mode: LayerMode,
+    optimizer: opt_lib.Optimizer,
+    *,
+    input_key: str = "image",
+    use_adc_rng: bool = False,
+):
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def train_step(params, model_state, opt_state, batch, step, rng):
+        def loss_fn(p):
+            ctx = Ctx(mode, rng if use_adc_rng else None)
+            logits, new_state = apply_fn(p, model_state, batch[input_key], ctx,
+                                         train=True)
+            loss = cross_entropy(logits, batch["label"])
+            return loss, (new_state, accuracy(logits, batch["label"]))
+
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = opt_lib.apply_updates(params, updates)
+        return params, new_state, opt_state, {"loss": loss, "acc": acc}
+
+    return train_step
+
+
+def make_eval_step(apply_fn: Callable, mode: LayerMode, *, input_key: str = "image"):
+    @jax.jit
+    def eval_step(params, model_state, batch, rng):
+        ctx = Ctx(mode, rng)
+        logits, _ = apply_fn(params, model_state, batch[input_key], ctx,
+                             train=False)
+        return {
+            "loss": cross_entropy(logits, batch["label"]),
+            "acc": accuracy(logits, batch["label"]),
+        }
+
+    return eval_step
+
+
+def train(
+    *,
+    init_fn: Callable,
+    apply_fn: Callable,
+    batch_fn: Callable[[int, int], Dict[str, Array]],
+    mode: LayerMode = LayerMode(),
+    optimizer: Optional[opt_lib.Optimizer] = None,
+    cfg: TrainConfig = TrainConfig(),
+    input_key: str = "image",
+    eval_mode: Optional[LayerMode] = None,
+    eval_rng: Optional[jax.Array] = None,
+    init_kwargs: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Returns {'params', 'state', 'history', 'eval'} — restartable via
+    cfg.ckpt_dir (picks up the latest complete checkpoint)."""
+    optimizer = optimizer or opt_lib.adamw(1e-3)
+    key = jax.random.PRNGKey(cfg.seed)
+    params, model_state = init_fn(key, **(init_kwargs or {}))
+    opt_state = optimizer.init(params)
+    start_step = 0
+
+    if cfg.ckpt_dir and ckpt.latest_step(cfg.ckpt_dir) is not None:
+        tree = {"params": params, "model_state": model_state, "opt": opt_state}
+        start_step, tree = ckpt.restore(cfg.ckpt_dir, tree)
+        params, model_state, opt_state = (
+            tree["params"], tree["model_state"], tree["opt"],
+        )
+
+    train_step = make_train_step(apply_fn, mode, optimizer, input_key=input_key,
+                                 use_adc_rng=mode.adc is not None)
+    ev_mode = eval_mode or mode
+    eval_step = make_eval_step(apply_fn, ev_mode, input_key=input_key)
+
+    history: List[Dict[str, float]] = []
+    for step in range(start_step, cfg.steps):
+        batch = batch_fn(step, cfg.batch_size)
+        rng = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 17), step)
+        params, model_state, opt_state, metrics = train_step(
+            params, model_state, opt_state, batch, jnp.asarray(step), rng
+        )
+        if step % cfg.eval_every == 0 or step == cfg.steps - 1:
+            history.append(
+                {"step": step, **{k: float(v) for k, v in metrics.items()}}
+            )
+        if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+            ckpt.save(
+                cfg.ckpt_dir,
+                step + 1,
+                {"params": params, "model_state": model_state, "opt": opt_state},
+                keep_k=cfg.keep_k,
+            )
+
+    ev = evaluate(
+        apply_fn, params, model_state, batch_fn, ev_mode,
+        n_batches=cfg.eval_batches, batch_size=cfg.batch_size,
+        input_key=input_key, rng=eval_rng, eval_step=eval_step,
+        seed=cfg.seed,
+    )
+    return {"params": params, "state": model_state, "history": history, "eval": ev}
+
+
+def evaluate(
+    apply_fn, params, model_state, batch_fn, mode,
+    *, n_batches=4, batch_size=64, input_key="image", rng=None,
+    eval_step=None, seed=0,
+) -> Dict[str, float]:
+    eval_step = eval_step or make_eval_step(apply_fn, mode, input_key=input_key)
+    accs, losses = [], []
+    for i in range(n_batches):
+        batch = batch_fn(10_000_000 + i, batch_size)  # held-out step range
+        r = None if rng is None else jax.random.fold_in(rng, i)
+        m = eval_step(params, model_state, batch, r)
+        accs.append(float(m["acc"]))
+        losses.append(float(m["loss"]))
+    return {"acc": sum(accs) / len(accs), "loss": sum(losses) / len(losses)}

@@ -1,0 +1,117 @@
+"""Minimal pytree optimizers (optax-style init/update pairs, no deps).
+
+AdamW and SGD-momentum, with global-norm clipping and schedules. Quantized
+layers train through STE (quant.py), so these see dense fp32 gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], Tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (updates, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return _tmap(lambda g: g * scale, grads), gnorm
+
+
+def cosine_warmup_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup_steps)
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+            0.0, 1.0,
+        )
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = None,
+    state_dtype: Any = jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": _tmap(zeros, params), "v": _tmap(zeros, params)}
+
+    def update(grads, state, params, step):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        g32 = _tmap(lambda g: g.astype(state_dtype), grads)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], g32)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        mhat_scale = 1.0 / (1.0 - b1 ** t)
+        vhat_scale = 1.0 / (1.0 - b2 ** t)
+        lr_t = lr_fn(step)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (
+                (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+                + weight_decay * p.astype(state_dtype)
+            )
+            return u.astype(p.dtype)
+
+        updates = _tmap(upd, m, v, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def sgd(
+    lr: float | Callable = 0.1,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    nesterov: bool = False,
+    max_grad_norm: Optional[float] = None,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": _tmap(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        g = _tmap(
+            lambda g_, p: g_ + weight_decay * p, grads, params
+        ) if weight_decay else grads
+        mom = _tmap(lambda m_, g_: momentum * m_ + g_, state["mom"], g)
+        eff = _tmap(lambda m_, g_: g_ + momentum * m_, mom, g) if nesterov else mom
+        lr_t = lr_fn(step)
+        updates = _tmap(lambda e: -lr_t * e, eff)
+        return updates, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return _tmap(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,306 @@
+"""Unit + property tests for the CADC core ops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, cadc, conv, dendritic, quant, sparsity
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, k=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(k), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dendritic f()
+# ---------------------------------------------------------------------------
+
+class TestDendritic:
+    @pytest.mark.parametrize("name", sorted(dendritic.DENDRITIC_FNS))
+    def test_zero_clamp(self, name):
+        """Paper: f(x) = 0 for x <= 0 (identity excepted)."""
+        f = dendritic.get(name)
+        x = jnp.array([-5.0, -1e-3, 0.0])
+        if name == "identity":
+            np.testing.assert_allclose(f(x), x)
+        else:
+            np.testing.assert_allclose(f(x), jnp.zeros_like(x))
+
+    @pytest.mark.parametrize("name", sorted(dendritic.DENDRITIC_FNS))
+    def test_grads_finite_everywhere(self, name):
+        f = dendritic.get(name)
+        x = jnp.array([-2.0, -1e-6, 0.0, 1e-6, 0.5, 3.0])
+        g = jax.vmap(jax.grad(lambda v: f(v)))(x)
+        assert np.isfinite(np.asarray(g)).all(), (name, g)
+
+    def test_positive_branch_values(self):
+        x = jnp.array([0.25, 1.0, 4.0])
+        np.testing.assert_allclose(dendritic.sublinear(x), jnp.sqrt(x), rtol=1e-5)
+        np.testing.assert_allclose(dendritic.supralinear(x), x * x, rtol=1e-6)
+        np.testing.assert_allclose(dendritic.tanh(x), jnp.tanh(x), rtol=1e-6)
+        np.testing.assert_allclose(dendritic.relu(x), x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cadc_matmul
+# ---------------------------------------------------------------------------
+
+class TestCadcMatmul:
+    def test_vconv_equals_matmul(self):
+        x, w = rand((8, 300)), rand((300, 50), k=1)
+        np.testing.assert_allclose(
+            cadc.vconv_matmul(x, w, crossbar_size=64), x @ w, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("d,n,xbar", [(64, 64, 64), (65, 3, 64), (300, 50, 128),
+                                          (1024, 256, 256), (7, 5, 64)])
+    def test_vconv_equals_matmul_shapes(self, d, n, xbar):
+        x, w = rand((4, d)), rand((d, n), k=1)
+        np.testing.assert_allclose(
+            cadc.vconv_matmul(x, w, crossbar_size=xbar), x @ w, atol=1e-3
+        )
+
+    def test_cadc_manual_reference(self):
+        """CADC against a hand-rolled segment loop."""
+        d, n, xbar = 200, 10, 64
+        x, w = rand((3, d)), rand((d, n), k=1)
+        s = cadc.num_segments(d, xbar)
+        xp = np.zeros((3, s * xbar), np.float32)
+        xp[:, :d] = np.asarray(x)
+        wp = np.zeros((s * xbar, n), np.float32)
+        wp[:d] = np.asarray(w)
+        acc = np.zeros((3, n), np.float32)
+        for si in range(s):
+            p = xp[:, si * xbar : (si + 1) * xbar] @ wp[si * xbar : (si + 1) * xbar]
+            acc += np.maximum(p, 0)
+        got = cadc.cadc_matmul(x, w, crossbar_size=xbar, fn="relu")
+        np.testing.assert_allclose(got, acc, atol=1e-4)
+
+    def test_single_segment_cadc_is_relu_of_matmul(self):
+        """When the layer fits one crossbar, CADC == f(x@w) — paper's Conv-1
+        case (no psums, but math still consistent)."""
+        x, w = rand((5, 60)), rand((60, 8), k=1)
+        got = cadc.cadc_matmul(x, w, crossbar_size=64, fn="relu")
+        np.testing.assert_allclose(got, jnp.maximum(x @ w, 0), atol=1e-5)
+
+    def test_psums_returned_shape_and_fp32(self):
+        x, w = rand((2, 7, 300)), rand((300, 50), k=1)
+        out = cadc.cadc_matmul(x, w, crossbar_size=64, fn="relu", return_psums=True)
+        s = cadc.num_segments(300, 64)
+        assert out.psums.shape == (2, 7, s, 50)
+        assert out.psums.dtype == jnp.float32
+        assert out.y.shape == (2, 7, 50)
+
+    def test_psum_transform_hook_applied(self):
+        x, w = rand((4, 256)), rand((256, 16), k=1)
+        doubled = cadc.cadc_matmul(
+            x, w, crossbar_size=64, fn="identity", psum_transform=lambda p: 2 * p
+        )
+        np.testing.assert_allclose(doubled, 2 * (x @ w), atol=1e-4)
+
+    def test_bf16_inputs_fp32_psums(self):
+        x = rand((4, 256)).astype(jnp.bfloat16)
+        w = rand((256, 16), k=1).astype(jnp.bfloat16)
+        out = cadc.cadc_matmul(x, w, crossbar_size=64, return_psums=True)
+        assert out.psums.dtype == jnp.float32
+        assert out.y.dtype == jnp.bfloat16
+
+    def test_grad_through_cadc(self):
+        x, w = rand((4, 256)), rand((256, 16), k=1)
+        g = jax.grad(
+            lambda w_: jnp.sum(cadc.cadc_matmul(x, w_, crossbar_size=64, fn="relu"))
+        )(w)
+        assert np.isfinite(np.asarray(g)).all()
+        # relu grad: only segments with positive psums contribute.
+        assert float(jnp.abs(g).sum()) > 0
+
+    def test_segment_einsum_matches(self):
+        d, n, xbar = 256, 32, 64
+        x, w = rand((6, d)), rand((d, n), k=1)
+        s = d // xbar
+        xs = x.reshape(6, s, xbar)
+        ws = w.reshape(s, xbar, n)
+        np.testing.assert_allclose(
+            cadc.cadc_einsum_segments(xs, ws, fn="relu"),
+            cadc.cadc_matmul(x, w, crossbar_size=xbar, fn="relu"),
+            atol=1e-4,
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestCadcProperties:
+        @given(
+            d=st.integers(2, 400),
+            n=st.integers(1, 40),
+            xbar=st.sampled_from([32, 64, 128, 256]),
+        )
+        @settings(max_examples=25, deadline=None)
+        def test_vconv_matches_dense(self, d, n, xbar):
+            x, w = rand((3, d), k=d), rand((d, n), k=n)
+            np.testing.assert_allclose(
+                cadc.vconv_matmul(x, w, crossbar_size=xbar),
+                x @ w,
+                atol=5e-3 * max(1, d // 64),
+            )
+
+        @given(
+            d=st.integers(65, 512),
+            xbar=st.sampled_from([32, 64, 128]),
+        )
+        @settings(max_examples=25, deadline=None)
+        def test_sparsity_equals_nonpositive_fraction(self, d, xbar):
+            """Invariant: relu-CADC psum sparsity == P(raw psum <= 0)."""
+            x, w = rand((4, d), k=d), rand((d, 8), k=d + 1)
+            raw = cadc.cadc_matmul(
+                x, w, crossbar_size=xbar, fn="identity", return_psums=True
+            ).psums
+            post = cadc.cadc_matmul(
+                x, w, crossbar_size=xbar, fn="relu", return_psums=True
+            ).psums
+            np.testing.assert_allclose(
+                float(sparsity.psum_sparsity(post)),
+                float(jnp.mean((raw <= 0).astype(jnp.float32))),
+                atol=1e-6,
+            )
+
+        @given(name=st.sampled_from(["relu", "sublinear", "supralinear", "tanh"]))
+        @settings(max_examples=8, deadline=None)
+        def test_cadc_output_nonnegative(self, name):
+            """All dendritic f() are nonnegative => CADC outputs are too."""
+            x, w = rand((4, 300), k=3), rand((300, 12), k=4)
+            y = cadc.cadc_matmul(x, w, crossbar_size=64, fn=name)
+            assert float(y.min()) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# conv
+# ---------------------------------------------------------------------------
+
+class TestConv:
+    @pytest.mark.parametrize(
+        "hw,cin,cout,k,stride,pad",
+        [
+            ((16, 16), 7, 5, 3, (1, 1), "SAME"),
+            ((16, 16), 7, 5, 3, (2, 2), "VALID"),
+            ((8, 10), 3, 4, 5, (1, 1), "SAME"),
+            ((28, 28), 1, 6, 5, (1, 1), "VALID"),
+            ((9, 9), 4, 4, 1, (1, 1), "VALID"),
+        ],
+    )
+    def test_vconv_conv_matches_lax(self, hw, cin, cout, k, stride, pad):
+        x = rand((2, *hw, cin), k=1)
+        w = rand((k, k, cin, cout), k=2)
+        ref = jax.lax.conv_general_dilated(
+            x, w, stride, pad, dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        got = conv.vconv_conv2d(x, w, crossbar_size=64, stride=stride, padding=pad)
+        np.testing.assert_allclose(ref, got, atol=1e-3)
+
+    def test_im2col_channel_fastest_ordering(self):
+        """Paper Fig. 2: with crossbar_size == Cin, each segment must be one
+        spatial tap. Check that patch element ((k1*K2+k2)*Cin + c) equals
+        x[.., i+k1, j+k2, c]."""
+        x = jnp.arange(1 * 5 * 5 * 3, dtype=jnp.float32).reshape(1, 5, 5, 3)
+        p = conv.im2col(x, (3, 3), padding="VALID")
+        k1, k2, c = 2, 1, 2
+        idx = (k1 * 3 + k2) * 3 + c
+        np.testing.assert_allclose(p[0, 1, 1, idx], x[0, 1 + k1, 1 + k2, c])
+
+    def test_paper_fig2_segment_count(self):
+        """64x3x3x64 kernel on 64x64 crossbars -> S = 9."""
+        assert cadc.num_segments(64 * 3 * 3, 64) == 9
+
+    def test_dilated_conv(self):
+        x = rand((1, 12, 12, 3), k=5)
+        w = rand((3, 3, 3, 4), k=6)
+        ref = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", rhs_dilation=(2, 2),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        got = conv.vconv_conv2d(
+            x, w, crossbar_size=64, padding="SAME", dilation=(2, 2)
+        )
+        np.testing.assert_allclose(ref, got, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# quant + adc
+# ---------------------------------------------------------------------------
+
+class TestQuant:
+    def test_ternary_codes(self):
+        w = rand((64, 64))
+        codes = quant.ternary_codes(w)
+        assert set(np.unique(np.asarray(codes))).issubset({-1, 0, 1})
+
+    def test_ternarize_values(self):
+        w = rand((128, 32))
+        q = quant.ternarize(w, ste=False)
+        vals = np.unique(np.asarray(q))
+        assert len(vals) <= 3
+
+    def test_ste_gradient_is_identity(self):
+        w = rand((32, 8))
+        g = jax.grad(lambda w_: jnp.sum(quant.ternarize(w_)))(w)
+        np.testing.assert_allclose(g, jnp.ones_like(w))
+
+    def test_quantize_levels(self):
+        x = jnp.linspace(-1, 1, 1000)
+        q = quant.quantize_symmetric(x, 4, ste=False)
+        assert len(np.unique(np.asarray(q))) <= 2 ** 4 - 1
+
+    def test_bits32_identity(self):
+        x = rand((10,))
+        np.testing.assert_allclose(quant.quantize_symmetric(x, 32), x)
+
+
+class TestAdc:
+    def test_quantization_only_no_key(self):
+        tr = adc.make_psum_transform(adc.AdcConfig(bits=4), key=None)
+        p = jnp.linspace(-10, 10, 101)
+        q = tr(p)
+        assert len(np.unique(np.asarray(q))) <= 2 ** 4 * 2 + 1
+
+    def test_cadc_mode_zeros_stay_noiseless(self):
+        """IMA property: non-positive psums read exactly 0 code, no noise."""
+        tr = adc.make_psum_transform(
+            adc.AdcConfig(bits=4, cadc_mode=True, full_scale=8.0),
+            key=jax.random.PRNGKey(9),
+        )
+        p = -jnp.abs(rand((1000,))) - 0.6  # strictly negative, below -LSB
+        q = tr(p)
+        # codes quantize to <= 0 and receive no noise -> deterministic
+        tr2 = adc.make_psum_transform(
+            adc.AdcConfig(bits=4, cadc_mode=True, full_scale=8.0),
+            key=jax.random.PRNGKey(10),
+        )
+        np.testing.assert_allclose(q, tr2(p))
+
+    def test_noise_statistics(self):
+        cfg = adc.AdcConfig(bits=5, cadc_mode=False, full_scale=31.0)
+        tr = adc.make_psum_transform(cfg, key=jax.random.PRNGKey(11))
+        p = jnp.full((200_000,), 10.0)
+        q = tr(p)
+        err_lsb = (np.asarray(q) - 10.0) / 1.0  # lsb = 31/31 = 1.0
+        assert abs(err_lsb.mean() - cfg.noise_mu) < 0.02
+        assert abs(err_lsb.std() - cfg.noise_sigma) < 0.02
+
+    def test_grad_flows_through_adc(self):
+        tr = adc.make_psum_transform(adc.AdcConfig(bits=4))
+        x, w = rand((4, 256)), rand((256, 16), k=1)
+        g = jax.grad(
+            lambda w_: jnp.sum(
+                cadc.cadc_matmul(x, w_, crossbar_size=64, psum_transform=tr)
+            )
+        )(w)
+        assert np.isfinite(np.asarray(g)).all()

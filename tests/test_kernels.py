@@ -1,0 +1,160 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import cadc_matmul as pk
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def rand(shape, k=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(k), shape).astype(dtype)
+
+
+SHAPES = [
+    # (m, d, n, xbar, bm, bn)
+    (32, 64, 32, 64, 32, 32),        # single segment, exact blocks
+    (70, 300, 90, 64, 32, 32),       # ragged everything
+    (8, 129, 17, 128, 8, 8),         # d just over one crossbar
+    (128, 512, 128, 256, 128, 128),  # production-like tile
+    (1, 1000, 1, 64, 8, 8),          # degenerate M/N
+    (33, 64, 65, 32, 16, 64),        # block_n > n
+]
+
+
+class TestCadcMatmulKernel:
+    @pytest.mark.parametrize("m,d,n,xbar,bm,bn", SHAPES)
+    @pytest.mark.parametrize("fn", ["relu", "identity"])
+    def test_fp32_sweep(self, m, d, n, xbar, bm, bn, fn):
+        x, w = rand((m, d), k=d), rand((d, n), k=n + 1)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=xbar, fn=fn, block_m=bm, block_n=bn,
+            interpret=True,
+        )
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn=fn)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("fn", ["sublinear", "supralinear", "tanh"])
+    def test_all_dendritic_fns(self, fn):
+        x, w = rand((48, 200), k=3), rand((200, 40), k=4)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=64, fn=fn, block_m=16, block_n=16,
+            interpret=True,
+        )
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=64, fn=fn)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_dtypes(self, dtype):
+        x, w = rand((64, 256), k=5, dtype=dtype), rand((256, 64), k=6, dtype=dtype)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=128, fn="relu", block_m=32, block_n=32,
+            interpret=True,
+        )
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=128, fn="relu")
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+    def test_leading_batch_dims(self):
+        x, w = rand((2, 5, 200), k=7), rand((200, 30), k=8)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=64, block_m=16, block_n=16, interpret=True
+        )
+        assert got.shape == (2, 5, 30)
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=64, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_core_xla_path(self):
+        """Kernel and the shardable XLA formulation must agree exactly."""
+        from repro.core import cadc as core_cadc
+
+        x, w = rand((40, 384), k=9), rand((384, 56), k=10)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=128, block_m=8, block_n=8, interpret=True
+        )
+        want = core_cadc.cadc_matmul(x, w, crossbar_size=128, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestQ8Kernel:
+    @pytest.mark.parametrize("m,d,n,xbar,bm,bn", SHAPES[:4])
+    def test_q8_sweep_bitexact(self, m, d, n, xbar, bm, bn):
+        """int8 path is exact — integer psums have one true answer."""
+        kx, kw = jax.random.split(jax.random.PRNGKey(d + n))
+        x_q = jax.random.randint(kx, (m, d), -7, 8, jnp.int8)
+        w_c = jax.random.randint(kw, (d, n), -1, 2, jnp.int8)
+        scale = jnp.float32(0.731)
+        got = pk.cadc_matmul_q8_pallas(
+            x_q, w_c, scale, crossbar_size=xbar, fn="relu",
+            block_m=bm, block_n=bn, interpret=True,
+        )
+        want = ref.cadc_matmul_q8_ref(x_q, w_c, scale, crossbar_size=xbar, fn="relu")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_q8_ternary_only_weights(self):
+        """Paper stores strictly ternary codes."""
+        x_q = jax.random.randint(jax.random.PRNGKey(0), (16, 128), -7, 8, jnp.int8)
+        w_c = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (128, 16))).astype(
+            jnp.int8
+        )
+        got = ops.cadc_matmul_q8(
+            x_q, w_c, jnp.float32(1.0), crossbar_size=64, impl="interpret",
+            block_m=8, block_n=8,
+        )
+        want = ref.cadc_matmul_q8_ref(
+            x_q, w_c, jnp.float32(1.0), crossbar_size=64, fn="relu"
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestOpsDispatch:
+    def test_xla_impl(self):
+        x, w = rand((8, 256), k=1), rand((256, 8), k=2)
+        got = ops.cadc_matmul(x, w, crossbar_size=64, impl="xla")
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=64, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_interpret_impl(self):
+        x, w = rand((8, 256), k=1), rand((256, 8), k=2)
+        got = ops.cadc_matmul(
+            x, w, crossbar_size=64, impl="interpret", block_m=8, block_n=8
+        )
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=64, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_auto_on_cpu_is_xla(self):
+        # container is CPU-only: auto must not attempt a TPU pallas compile
+        x, w = rand((4, 64), k=1), rand((64, 4), k=2)
+        got = ops.cadc_matmul(x, w, crossbar_size=64, impl="auto")
+        assert got.shape == (4, 4)
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestKernelProperties:
+        @given(
+            m=st.integers(1, 64),
+            d=st.integers(1, 300),
+            n=st.integers(1, 64),
+            xbar=st.sampled_from([32, 64, 128, 256]),
+        )
+        @settings(max_examples=20, deadline=None)
+        def test_kernel_matches_oracle_any_shape(self, m, d, n, xbar):
+            x, w = rand((m, d), k=m * 7 + d), rand((d, n), k=n * 13 + 1)
+            got = pk.cadc_matmul_pallas(
+                x, w, crossbar_size=xbar, fn="relu", block_m=16, block_n=16,
+                interpret=True,
+            )
+            want = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn="relu")
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,220 @@
+"""Per-architecture smoke + behaviour tests (reduced same-family configs).
+
+The decode-vs-train consistency test is the strongest correctness check in
+the repo: KV caches, rolling local windows, RoPE offsets, recurrent states
+and conv buffers must all agree with the parallel training forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, smoke_config
+from repro.models.lm import transformer as tf
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64, key=KEY):
+    if cfg.frontend == "audio":
+        return {"frames": jax.random.normal(key, (b, s, cfg.frontend_dim))}
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vit":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.frontend_len, cfg.frontend_dim)
+        )
+    return batch
+
+
+class TestSmokeForward:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    @pytest.mark.parametrize("impl", ["dense", "cadc"])
+    def test_forward_shapes_no_nans(self, arch, impl):
+        cfg = smoke_config(arch, linear_impl=impl)
+        params = tf.init(KEY, cfg)
+        batch = make_batch(cfg)
+        logits, aux = tf.forward_train(params, batch, cfg)
+        assert logits.shape == (2, 64, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        assert bool(jnp.isfinite(aux))
+
+    @pytest.mark.parametrize("arch", ["gemma_7b", "mixtral_8x22b", "xlstm_13b"])
+    def test_train_step_one_grad(self, arch):
+        cfg = smoke_config(arch)
+        params = tf.init(KEY, cfg)
+        batch = make_batch(cfg)
+        labels = jax.random.randint(KEY, (2, 64), 0, cfg.vocab_size)
+
+        def loss_fn(p):
+            logits, aux = tf.forward_train(p, batch, cfg)
+            loss, _ = tf.lm_loss(logits, labels)
+            return loss + 0.01 * aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(float(loss))
+        gn = sum(
+            float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads)
+        )
+        assert np.isfinite(gn) and gn > 0
+
+    def test_cadc_changes_output(self):
+        cfg_d = smoke_config("gemma_7b", linear_impl="dense")
+        cfg_c = smoke_config("gemma_7b", linear_impl="cadc")
+        pd = tf.init(KEY, cfg_d)
+        pc = tf.init(KEY, cfg_c)
+        batch = make_batch(cfg_d)
+        ld, _ = tf.forward_train(pd, batch, cfg_d)
+        lc, _ = tf.forward_train(pc, batch, cfg_c)
+        assert not np.allclose(np.asarray(ld), np.asarray(lc))
+
+    def test_cadc_identity_fn_matches_dense(self):
+        """CADC with f=identity == vConv == plain matmul: same params give
+        (near-)identical logits. The segmented weight is a reshape of the
+        dense one, so init with the same key gives the same values."""
+        cfg_c = smoke_config("gemma_7b", linear_impl="cadc",
+                             dendritic_fn="identity", scan_layers=False,
+                             n_layers=2)
+        # d_model=64 == crossbar 64 -> exact reshape equivalence; without
+        # layer stacking the only 3-D leaves are segmented CADC weights.
+        pc = tf.init(KEY, cfg_c)
+        dense_params = jax.tree_util.tree_map(
+            lambda w: w.reshape(-1, w.shape[-1]) if w.ndim == 3 else w, pc
+        )
+        cfg_d = smoke_config("gemma_7b", linear_impl="dense",
+                             scan_layers=False, n_layers=2)
+        batch = make_batch(cfg_c)
+        lc, _ = tf.forward_train(pc, batch, cfg_c)
+        ld, _ = tf.forward_train(dense_params, batch, cfg_d)
+        np.testing.assert_allclose(np.asarray(lc), np.asarray(ld),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize(
+        "arch",
+        ["gemma_7b", "gemma3_1b", "mixtral_8x22b", "qwen2_moe_a27b",
+         "xlstm_13b", "recurrentgemma_9b", "phi4_mini_38b"],
+    )
+    def test_decode_matches_train_forward(self, arch):
+        """Token-by-token decode must reproduce the parallel forward.
+
+        MoE routers are sharpened (x20): at random init routing is a
+        near-tie, and ~1e-6 numeric differences between the chunked train
+        attention and the decode path flip expert choices discontinuously.
+        Trained routers are decisive; sharpening tests the cache/dispatch
+        machinery instead of tie-breaking noise. Capacity is raised to
+        drop-free for the same reason (train drops at full capacity, a
+        2-token decode batch never does — a semantic difference of
+        capacity-based MoE, not a cache bug)."""
+        cfg = smoke_config(arch)
+        if cfg.moe.n_experts > 0:
+            import dataclasses as dc
+            cfg = cfg.with_overrides(
+                moe=dc.replace(cfg.moe,
+                               capacity_factor=float(cfg.moe.n_experts))
+            )
+        params = tf.init(KEY, cfg)
+        if cfg.moe.n_experts > 0:
+            def sharpen(d):
+                if isinstance(d, dict):
+                    return {
+                        k: (v * 20.0 if k == "router" else sharpen(v))
+                        for k, v in d.items()
+                    }
+                if isinstance(d, tuple):
+                    return tuple(sharpen(v) for v in d)
+                return d
+            params = sharpen(params)
+        b, s = 2, 48
+        tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        train_logits, _ = tf.forward_train(params, {"tokens": tokens}, cfg)
+
+        caches = tf.init_caches(cfg, b, s)
+        step = jax.jit(
+            lambda p, t, pos, c: tf.decode_step(p, t, pos, c, cfg)
+        )
+        dec = []
+        for t in range(s):
+            logits, caches = step(params, tokens[:, t], jnp.int32(t), caches)
+            dec.append(logits)
+        dec_logits = jnp.stack(dec, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits), np.asarray(train_logits),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    def test_rolling_local_cache_beyond_window(self):
+        """gemma3 local layers: decode past the window must stay consistent
+        with the train mask (window smaller than sequence)."""
+        cfg = smoke_config("gemma3_1b", local_window=16)
+        params = tf.init(KEY, cfg)
+        b, s = 1, 40  # > 2x window
+        tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        train_logits, _ = tf.forward_train(params, {"tokens": tokens}, cfg)
+        caches = tf.init_caches(cfg, b, s)
+        step = jax.jit(lambda p, t, pos, c: tf.decode_step(p, t, pos, c, cfg))
+        dec = []
+        for t in range(s):
+            logits, caches = step(params, tokens[:, t], jnp.int32(t), caches)
+            dec.append(logits)
+        np.testing.assert_allclose(
+            np.asarray(jnp.stack(dec, 1)), np.asarray(train_logits),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_full_config_loads(self, arch):
+        cfg = get_config(arch)
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+        assert len(cfg.pattern_for_layers) == cfg.n_layers
+
+    def test_assigned_dims_exact(self):
+        """Spot-check the assigned table is transcribed exactly."""
+        g = get_config("gemma_7b")
+        assert (g.n_layers, g.d_model, g.n_heads, g.d_ff, g.vocab_size) == (
+            28, 3072, 16, 24576, 256000)
+        m = get_config("mixtral_8x22b")
+        assert (m.n_layers, m.d_model, m.n_heads, m.moe.n_experts,
+                m.moe.top_k) == (56, 6144, 48, 8, 2)
+        q = get_config("qwen2_moe_a27b")
+        assert (q.moe.n_experts, q.moe.top_k, q.moe.d_expert) == (60, 4, 1408)
+        h = get_config("hubert_xlarge")
+        assert h.is_encoder and h.vocab_size == 504
+
+    def test_cell_skip_logic(self):
+        # encoder: no decode shapes
+        hub = get_config("hubert_xlarge")
+        assert "decode_32k" not in hub.shape_cells()
+        assert "long_500k" not in hub.shape_cells()
+        # pure full attention: no long_500k
+        for arch in ["gemma_7b", "codeqwen15_7b", "phi4_mini_38b",
+                     "qwen2_moe_a27b", "internvl2_1b"]:
+            assert "long_500k" not in get_config(arch).shape_cells(), arch
+        # sub-quadratic or windowed: long_500k runs
+        for arch in ["gemma3_1b", "mixtral_8x22b", "xlstm_13b",
+                     "recurrentgemma_9b"]:
+            assert "long_500k" in get_config(arch).shape_cells(), arch
+
+    def test_total_cell_count_is_40(self):
+        """10 archs x 4 shapes: every cell is either run or has a recorded
+        skip reason."""
+        total = 0
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            total += len(cfg.shape_cells()) + len(cfg.skip_reasons())
+        assert total == 40
+
+    def test_moe_param_count_mixtral(self):
+        """Mixtral-8x22B ~= 141B params."""
+        cfg = get_config("mixtral_8x22b")
+        shapes = jax.eval_shape(lambda k: tf.init(k, cfg), KEY)
+        n = sum(np.prod(s.shape) for s in jax.tree_util.tree_leaves(shapes))
+        assert 130e9 < n < 150e9, f"{n/1e9:.1f}B"
+
+    def test_param_count_gemma7b(self):
+        cfg = get_config("gemma_7b")
+        shapes = jax.eval_shape(lambda k: tf.init(k, cfg), KEY)
+        n = sum(np.prod(s.shape) for s in jax.tree_util.tree_leaves(shapes))
+        assert 7.5e9 < n < 9.5e9, f"{n/1e9:.2f}B"  # 8.5B w/ embeddings
