@@ -5,7 +5,10 @@ CPU container => no TPU wall-clocks for the Pallas kernel itself; we report
 (b) XLA-path timing of cadc vs vconv vs plain dot on CPU (the relative cost
     of the per-segment f() epilogue), and
 (c) the kernel's analytic VMEM working set + arithmetic intensity per
-    BlockSpec configuration — the quantities that size the TPU mapping.
+    BlockSpec configuration — the quantities that size the TPU mapping, and
+(d) the backward pass: custom_vjp (interpret) gradient correctness vs the
+    XLA autodiff oracle + XLA-path fwd/bwd timing — the training hot path
+    now that jax.grad flows through the fused kernels.
 """
 from __future__ import annotations
 
@@ -61,6 +64,24 @@ def run() -> C.Emitter:
             overhead_vs_dot=t_v / t_dot)
     em.emit(table="xla_timing", op="cadc_segmented", us_per_call=t_c,
             overhead_vs_vconv=t_c / t_v)
+
+    # (d) backward: custom_vjp (interpret) == oracle autodiff; XLA timing
+    xg, wg = x[:64, :512], w[:512, :256]
+    r = jax.random.normal(jax.random.fold_in(key, 2), (64, 256))
+    g_pl = jax.grad(lambda a, b: jnp.vdot(cadc_matmul_pallas(
+        a, b, crossbar_size=xbar, fn="relu", interpret=True,
+        block_m=32, block_n=32), r), argnums=(0, 1))(xg, wg)
+    g_ref = jax.grad(lambda a, b: jnp.vdot(ref.cadc_matmul_ref(
+        a, b, crossbar_size=xbar, fn="relu"), r), argnums=(0, 1))(xg, wg)
+    gerr = max(float(jnp.max(jnp.abs(p - q))) for p, q in zip(g_pl, g_ref))
+    em.emit(table="grad_correctness", kernel="cadc_matmul_vjp",
+            shape="64x512x256", xbar=xbar, max_abs_err=gerr, ok=gerr < 1e-4)
+    cadc_grad = jax.jit(jax.grad(
+        lambda a, b: jnp.sum(ops.cadc_matmul(a, b, crossbar_size=xbar,
+                                             fn="relu")), argnums=(0, 1)))
+    t_g = _time(lambda a, b: cadc_grad(a, b)[0], x, w)
+    em.emit(table="xla_timing", op="cadc_segmented_grad", us_per_call=t_g,
+            overhead_vs_fwd=t_g / t_c)
 
     # (c) analytic TPU mapping per BlockSpec
     for bm, bn in ((128, 128), (256, 256), (512, 512)):

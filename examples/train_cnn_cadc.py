@@ -23,13 +23,19 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--xbar", type=int, default=64)
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "xla", "pallas", "interpret"],
+                    help="segmented-matmul backend; 'auto' trains through "
+                         "the fused Pallas kernels (custom_vjp) on TPU and "
+                         "the XLA einsum elsewhere")
     args = ap.parse_args()
 
     data = synthetic.make_classification_dataset(
         synthetic.ClassificationSpec(n_classes=10, hw=28, channels=1,
                                      noise=0.8))
     cfg = loop.TrainConfig(steps=args.steps, batch_size=args.batch,
-                           eval_every=max(1, args.steps // 6), eval_batches=8)
+                           eval_every=max(1, args.steps // 6), eval_batches=8,
+                           kernel=args.kernel)
 
     results = {}
     for label, mode in [

@@ -83,6 +83,11 @@ class ArchConfig:
     linear_impl: str = "dense"       # 'dense' | 'cadc'
     crossbar_size: int = 256
     dendritic_fn: str = "relu"
+    # Kernel backend for CADC linears: 'xla' keeps the segmented einsum
+    # (shards under GSPMD, honors bf16_wire); 'pallas'/'interpret'/'auto'
+    # route through the fused Pallas kernels (kernels/ops.py), which are
+    # differentiable via custom_vjp — valid under jax.grad everywhere.
+    kernel_impl: str = "xla"
 
     # ---- numerics / execution ----
     dtype: str = "bfloat16"

@@ -6,10 +6,20 @@ g in {ReLU(x), sqrt(x) (sublinear), k*x^2 (supralinear), tanh(x)}.
 All functions here are grad-safe at x == 0 (the sublinear sqrt has an
 unbounded derivative at 0+; we use the standard `where`-guard so neither the
 primal nor the cotangent produces NaN/Inf under jax.grad).
+
+Besides the primal f(), every registered nonlinearity carries its analytic
+derivative f'() — `grad(name)` — which the Pallas kernels' custom_vjp rules
+evaluate IN the forward kernel (the per-segment "gate"): the backward pass
+then only needs `cotangent * gate` per segment, never the raw psums.
+`gate_dtype(name)` picks the narrowest storage for that gate: relu's
+derivative is a {0,1} indicator, so the forward saves a bool mask (1 byte,
+4x smaller than fp32 psums; a true bitmask on hardware); identity needs no
+gate at all (None); curved fns store fp32. Use `register()` to add a new
+f() + f'() pair — the Pallas VJPs pick it up with no kernel changes.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax.numpy as jnp
 
@@ -27,7 +37,11 @@ def identity(x: Array) -> Array:
 
 
 def relu(x: Array) -> Array:
-    return jnp.maximum(x, 0)
+    # where(x > 0, ...) rather than jnp.maximum: autodiff then gives the
+    # f'(0) = 0 subgradient — the same convention as the kernels' saved
+    # bitmask (maximum splits the tie 0.5/0.5, and exact-zero psums are
+    # common: zero-padded conv borders, quantized/sparse activations).
+    return jnp.where(x > 0, x, 0.0)
 
 
 def sublinear(x: Array) -> Array:
@@ -55,6 +69,53 @@ DENDRITIC_FNS: Dict[str, Callable[[Array], Array]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Derivative registry — f'(psum), the per-segment gate of the kernel VJPs.
+# ---------------------------------------------------------------------------
+
+def identity_grad(x: Array) -> Array:
+    return jnp.ones_like(x)
+
+
+def relu_grad(x: Array) -> Array:
+    """Indicator x > 0 — THE bitmask the fused forward kernel saves."""
+    return (x > 0).astype(x.dtype)
+
+
+def sublinear_grad(x: Array) -> Array:
+    """0.5 / sqrt(x + eps) for x > 0 else 0 (same guard as the primal)."""
+    safe = jnp.where(x > 0, x, 1.0)
+    return jnp.where(x > 0, 0.5 / jnp.sqrt(safe + _SQRT_EPS), 0.0)
+
+
+def supralinear_grad(x: Array, k: float = SUPRALINEAR_K) -> Array:
+    return jnp.where(x > 0, 2.0 * k * x, 0.0)
+
+
+def tanh_grad(x: Array) -> Array:
+    t = jnp.tanh(x)
+    return jnp.where(x > 0, 1.0 - t * t, 0.0)
+
+
+DENDRITIC_GRADS: Dict[str, Callable[[Array], Array]] = {
+    "identity": identity_grad,
+    "relu": relu_grad,
+    "sublinear": sublinear_grad,
+    "supralinear": supralinear_grad,
+    "tanh": tanh_grad,
+}
+
+# Narrowest dtype that represents f'(psum) exactly. None => gate is
+# constant 1 and the VJP skips saving/applying it entirely.
+GATE_DTYPES: Dict[str, Optional[jnp.dtype]] = {
+    "identity": None,
+    "relu": jnp.bool_,
+    "sublinear": jnp.float32,
+    "supralinear": jnp.float32,
+    "tanh": jnp.float32,
+}
+
+
 def get(name: str) -> Callable[[Array], Array]:
     try:
         return DENDRITIC_FNS[name]
@@ -62,3 +123,72 @@ def get(name: str) -> Callable[[Array], Array]:
         raise ValueError(
             f"unknown dendritic fn {name!r}; choose from {sorted(DENDRITIC_FNS)}"
         ) from None
+
+
+def grad(name: str) -> Callable[[Array], Array]:
+    """f'() for a registered nonlinearity (raises for unregistered names)."""
+    get(name)  # uniform unknown-name error
+    try:
+        return DENDRITIC_GRADS[name]
+    except KeyError:
+        raise ValueError(
+            f"dendritic fn {name!r} has no registered derivative; pass "
+            f"grad_fn= to dendritic.register()"
+        ) from None
+
+
+def gate_dtype(name: str) -> Optional[jnp.dtype]:
+    """Storage dtype of f'(psum) for the kernel VJPs (None => skip gate).
+    Raises for fns without a registered derivative — same contract as
+    grad(), so either can serve as the is-this-differentiable probe."""
+    get(name)
+    try:
+        return GATE_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"dendritic fn {name!r} has no registered derivative; pass "
+            f"grad_fn= to dendritic.register()"
+        ) from None
+
+
+# Called with the fn name on every (re-)registration; the kernel modules
+# append cache-invalidation hooks here so a re-registered name never serves
+# a stale compiled op (their op factories + jit wrappers cache on the name).
+_REGISTER_HOOKS: list = []
+
+
+def on_register(hook: Callable[[str], None]) -> None:
+    _REGISTER_HOOKS.append(hook)
+
+
+def register(
+    name: str,
+    fn: Callable[[Array], Array],
+    grad_fn: Optional[Callable[[Array], Array]] = None,
+    *,
+    gate: Optional[jnp.dtype] = jnp.float32,
+) -> None:
+    """Register a dendritic f() (and optionally f') under `name`.
+
+    With grad_fn provided, the Pallas kernel VJPs differentiate through the
+    new nonlinearity with zero kernel changes; without it, only the XLA
+    autodiff path can train through it (Pallas runs forward-only).
+    Re-registering a name invalidates the kernels' compiled-op caches.
+    """
+    DENDRITIC_FNS[name] = fn
+    if grad_fn is not None:
+        if gate is None:
+            # gate=None is the internal "f' ≡ 1, save nothing" marker
+            # (identity). Accepting it alongside a real grad_fn would make
+            # the kernel VJPs silently drop the derivative.
+            raise ValueError(
+                "gate=None is reserved for identity-like fns; pass a dtype "
+                "(e.g. jnp.float32, or jnp.bool_ for indicator derivatives)"
+            )
+        DENDRITIC_GRADS[name] = grad_fn
+        GATE_DTYPES[name] = gate
+    else:
+        DENDRITIC_GRADS.pop(name, None)
+        GATE_DTYPES.pop(name, None)
+    for hook in _REGISTER_HOOKS:
+        hook(name)

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Layout: cadc_matmul.py / cadc_conv.py hold the fused Pallas kernels AND
+# their custom_vjp backward kernels (saved-gate design — the forward emits
+# f'(psum) per segment, the backward runs the two segmented MXU
+# contractions as Pallas kernels). ops.py is the gradient-aware dispatch;
+# ref.py holds sequential-accumulation jnp oracles.

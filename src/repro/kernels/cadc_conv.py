@@ -25,6 +25,23 @@ padded image [1, HP, WP, C]; w block = [D, bn] column slice; out block =
 Constraints: dilation=1; stride via in-register slicing; the padded image
 must fit VMEM (wrapper falls back to the im2col XLA path otherwise — see
 ops.cadc_conv2d).
+
+Gradients (custom_vjp)
+----------------------
+Because the conv IS the segmented matmul over im2col patches, its VJP
+reuses the segmented backward Pallas kernels of cadc_matmul:
+
+  forward:  emits the per-segment gate f'(psum) [S, B, OH, OW, Cout] as a
+            second kernel output while the psum tile is in VREGs (bool mask
+            for relu, nothing for identity — dendritic.gate_dtype);
+  backward: recomputes patches via the cheap XLA im2col (a dozen strided
+            slices), runs dpatches = (g ⊙ gate_s) @ w_sᵀ and
+            dw_s = patchesᵀ @ (g ⊙ gate_s) as the SAME (parallel, parallel,
+            arbitrary) segmented MXU kernels, then folds dpatches back to
+            dx with a static col2im scatter-add (linear, XLA).
+
+The two heavy contractions — all the FLOPs of the backward — thus run on
+the MXU with psum-free residuals; only the O(K^2) fold is left to XLA.
 """
 from __future__ import annotations
 
@@ -34,10 +51,11 @@ from typing import Callable, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dendritic
-from repro.core.conv import _norm_padding
+from repro.core.conv import _norm_padding, im2col
+from repro.kernels.cadc_matmul import (CompilerParams, _resolve_gate,
+                                       _segmented_bwd)
 
 Array = jnp.ndarray
 
@@ -61,29 +79,35 @@ def _segment_taps(k1: int, k2: int, c: int, xbar: int):
     return segs
 
 
+def _tap_psum(x_ref, w_ref, taps, *, oh0, k2, bh, ow, s1, s2, xbar, bn, si):
+    """Accumulate one segment's psum tile [bh*ow, bn] over its taps."""
+    p = jnp.zeros((bh * ow, bn), jnp.float32)
+    for (i, j, c_lo, c_sz, d_off) in taps:
+        rows = (bh - 1) * s1 + 1
+        cols = (ow - 1) * s2 + 1
+        xt = pl.load(
+            x_ref,
+            (pl.ds(0, 1), pl.ds(oh0 + i, rows), pl.ds(j, cols),
+             pl.ds(c_lo, c_sz)),
+        )[0]  # [rows, cols, c_sz]
+        xt = xt[::s1, ::s2, :].reshape(bh * ow, c_sz)
+        wt = w_ref[si * xbar + d_off : si * xbar + d_off + c_sz, :]
+        p += jnp.dot(xt.astype(jnp.float32), wt.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return p
+
+
 def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, segs, k2: int, c: int,
             bh: int, ow: int, s1: int, s2: int, xbar: int, bn: int):
     s = pl.program_id(3)
     oh_blk = pl.program_id(1)
     oh0 = oh_blk * bh * s1  # first input row of this output row block
 
-    psum = jnp.zeros((bh * ow, bn), jnp.float32)
     for si, taps in enumerate(segs):
         @pl.when(s == si)
         def _body(taps=taps, si=si):
-            p = jnp.zeros((bh * ow, bn), jnp.float32)
-            for (i, j, c_lo, c_sz, d_off) in taps:
-                rows = (bh - 1) * s1 + 1
-                cols = (ow - 1) * s2 + 1
-                xt = pl.load(
-                    x_ref,
-                    (0, pl.ds(oh0 + i, rows), pl.ds(j, cols),
-                     pl.ds(c_lo, c_sz)),
-                )  # [rows, cols, c_sz]
-                xt = xt[::s1, ::s2, :].reshape(bh * ow, c_sz)
-                wt = w_ref[si * xbar + d_off : si * xbar + d_off + c_sz, :]
-                p += jnp.dot(xt.astype(jnp.float32), wt.astype(jnp.float32),
-                             preferred_element_type=jnp.float32)
+            p = _tap_psum(x_ref, w_ref, taps, oh0=oh0, k2=k2, bh=bh, ow=ow,
+                          s1=s1, s2=s2, xbar=xbar, bn=bn, si=si)
             fps = fn(p).reshape(bh, ow, bn)
 
             @pl.when(s == 0)
@@ -95,25 +119,62 @@ def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, segs, k2: int, c: int,
                 o_ref[...] += fps[None]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("crossbar_size", "fn", "stride", "padding", "block_h",
-                     "block_n", "interpret"),
-)
-def cadc_conv2d_pallas(
-    x: Array,
-    w: Array,
-    *,
-    crossbar_size: int = 256,
-    fn: str = "relu",
-    stride: Tuple[int, int] = (1, 1),
-    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
-    block_h: int = 8,
-    block_n: int = 128,
-    interpret: bool = False,
+def _kernel_with_gate(x_ref, w_ref, o_ref, g_ref, *, fn: Callable,
+                      gate_fn: Callable, segs, k2: int, c: int, bh: int,
+                      ow: int, s1: int, s2: int, xbar: int, bn: int):
+    """VJP forward: also writes this segment's gate f'(psum) tile."""
+    s = pl.program_id(3)
+    oh_blk = pl.program_id(1)
+    oh0 = oh_blk * bh * s1
+
+    for si, taps in enumerate(segs):
+        @pl.when(s == si)
+        def _body(taps=taps, si=si):
+            p = _tap_psum(x_ref, w_ref, taps, oh0=oh0, k2=k2, bh=bh, ow=ow,
+                          s1=s1, s2=s2, xbar=xbar, bn=bn, si=si)
+            fps = fn(p).reshape(bh, ow, bn)
+            g_ref[...] = gate_fn(p).astype(g_ref.dtype).reshape(
+                1, 1, bh, ow, bn)
+
+            @pl.when(s == 0)
+            def _init():
+                o_ref[...] = fps[None]
+
+            @pl.when(s > 0)
+            def _acc():
+                o_ref[...] += fps[None]
+
+
+def _col2im(
+    dp: Array,
+    x_shape: Tuple[int, int, int, int],
+    kernel: Tuple[int, int],
+    stride: Tuple[int, int],
+    padding,
 ) -> Array:
-    """x [B,H,W,Cin] NHWC, w [K1,K2,Cin,Cout] HWIO -> [B,OH,OW,Cout] fp32."""
-    f = dendritic.get(fn)
+    """Adjoint of core.conv.im2col (dilation=1): scatter-add each tap's
+    dpatch slice back onto the padded image, then crop the conv padding."""
+    k1, k2 = kernel
+    s1, s2 = stride
+    b, h, w, c = x_shape
+    (pt, pb), (pl_, pr) = _norm_padding(padding, kernel, (1, 1))
+    hp, wp = h + pt + pb, w + pl_ + pr
+    oh, ow = dp.shape[1], dp.shape[2]
+    dp5 = dp.reshape(b, oh, ow, k1 * k2, c)
+    dx = jnp.zeros((b, hp, wp, c), dp.dtype)
+    for i in range(k1):
+        for j in range(k2):
+            dx = dx.at[
+                :, i : i + (oh - 1) * s1 + 1 : s1,
+                j : j + (ow - 1) * s2 + 1 : s2, :,
+            ].add(dp5[:, :, :, i * k2 + j, :])
+    return dx[:, pt : pt + h, pl_ : pl_ + w, :]
+
+
+def _conv_pallas(x, w, *, f, gate_fn, gate_dt, crossbar_size, stride,
+                 padding, block_h, block_n, interpret):
+    """Run the fused conv (optionally emitting the gate) — returns
+    (y [B, OH, OW, Cout] fp32, gate [S, B, OH, OW, Cout] or None)."""
     k1, k2, cin, cout = w.shape
     s1, s2 = stride
     (pt, pb), (pl_, pr) = _norm_padding(padding, (k1, k2), (1, 1))
@@ -137,26 +198,135 @@ def cadc_conv2d_pallas(
         w2d = jnp.pad(w2d, ((0, 0), (0, cout_pad - cout)))
 
     segs = _segment_taps(k1, k2, cin, crossbar_size)
-    grid = (b, oh_pad // bh, cout_pad // bn, len(segs))
+    n_seg = len(segs)
+    grid = (b, oh_pad // bh, cout_pad // bn, n_seg)
+    kw = dict(segs=segs, k2=k2, c=cin, bh=bh, ow=ow, s1=s1, s2=s2,
+              xbar=crossbar_size, bn=bn)
+
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, cin), lambda bi, hi, ni, si: (bi, 0, 0, 0)),
+        pl.BlockSpec((k1 * k2 * cin, bn), lambda bi, hi, ni, si: (0, ni)),
+    ]
+    out_specs = pl.BlockSpec(
+        (1, bh, ow, bn), lambda bi, hi, ni, si: (bi, hi, 0, ni)
+    )
+    out_shape = jax.ShapeDtypeStruct((b, oh_pad, ow, cout_pad), jnp.float32)
+    if gate_dt is not None:
+        body = functools.partial(_kernel_with_gate, fn=f, gate_fn=gate_fn,
+                                 **kw)
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((1, 1, bh, ow, bn),
+                         lambda bi, hi, ni, si: (si, bi, hi, 0, ni)),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((n_seg, b, oh_pad, ow, cout_pad), gate_dt),
+        ]
+    else:
+        body = functools.partial(_kernel, fn=f, **kw)
 
     out = pl.pallas_call(
-        functools.partial(
-            _kernel, fn=f, segs=segs, k2=k2, c=cin, bh=bh, ow=ow,
-            s1=s1, s2=s2, xbar=crossbar_size, bn=bn,
-        ),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, cin), lambda bi, hi, ni, si: (bi, 0, 0, 0)),
-            pl.BlockSpec((k1 * k2 * cin, bn), lambda bi, hi, ni, si: (0, ni)),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, bh, ow, bn), lambda bi, hi, ni, si: (bi, hi, 0, ni)
-        ),
-        out_shape=jax.ShapeDtypeStruct((b, oh_pad, ow, cout_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")
         ),
         interpret=interpret,
     )(xp, w2d)
-    return out[:, :oh, :, :cout]
+    if gate_dt is not None:
+        y, gate = out
+        return y[:, :oh, :, :cout], gate[:, :, :oh, :, :cout]
+    return out[:, :oh, :, :cout], None
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_conv_op(crossbar_size: int, fn: str, stride: Tuple[int, int],
+                  padding, block_h: int, block_n: int, interpret: bool):
+    f, gate_fn, gate_dt = _resolve_gate(fn)
+    statics = dict(crossbar_size=crossbar_size, stride=stride,
+                   padding=padding, block_h=block_h, block_n=block_n,
+                   interpret=interpret)
+
+    if gate_fn is None:
+        return lambda x, w: _conv_pallas(x, w, f=f, gate_fn=None,
+                                         gate_dt=None, **statics)[0]
+
+    @jax.custom_vjp
+    def op(x, w):
+        y, _ = _conv_pallas(x, w, f=f, gate_fn=gate_fn, gate_dt=None,
+                            **statics)
+        return y
+
+    def op_fwd(x, w):
+        y, gate = _conv_pallas(x, w, f=f, gate_fn=gate_fn, gate_dt=gate_dt,
+                               **statics)
+        return y, (x, w, gate)
+
+    def op_bwd(res, g):
+        x, w, gate = res
+        k1, k2, cin, cout = w.shape
+        b, oh, ow_, _ = g.shape
+        m = b * oh * ow_
+        patches = im2col(x, (k1, k2), stride=stride, padding=padding)
+        g2 = g.reshape(m, cout)
+        gate2 = None if gate is None else gate.reshape(-1, m, cout)
+        dpat, dw2d = _segmented_bwd(
+            g2, patches.reshape(m, k1 * k2 * cin),
+            w.reshape(k1 * k2 * cin, cout), gate2,
+            crossbar_size=crossbar_size, block_m=128, block_n=128,
+            interpret=interpret,
+        )
+        dx = _col2im(dpat.reshape(b, oh, ow_, k1 * k2 * cin), x.shape,
+                     (k1, k2), stride, padding)
+        return dx.astype(x.dtype), dw2d.reshape(w.shape).astype(w.dtype)
+
+    op.defvjp(op_fwd, op_bwd)
+    return op
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("crossbar_size", "fn", "stride", "padding", "block_h",
+                     "block_n", "interpret"),
+)
+def _conv_jit(x, w, *, crossbar_size, fn, stride, padding, block_h, block_n,
+              interpret):
+    op = _diff_conv_op(crossbar_size, fn, stride, padding, block_h,
+                       block_n, interpret)
+    return op(x, w)
+
+
+def cadc_conv2d_pallas(
+    x: Array,
+    w: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    stride: Tuple[int, int] = (1, 1),
+    padding: Union[str, Sequence[Tuple[int, int]]] = "SAME",
+    block_h: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """x [B,H,W,Cin] NHWC, w [K1,K2,Cin,Cout] HWIO -> [B,OH,OW,Cout] fp32.
+    Differentiable via the saved-gate custom_vjp (module docstring)."""
+    # Hashability normalization must happen OUTSIDE the jit boundary —
+    # list paddings/strides would otherwise die at jit dispatch.
+    if not isinstance(padding, str):
+        padding = tuple(tuple(p) for p in padding)
+    return _conv_jit(x, w, crossbar_size=crossbar_size, fn=fn,
+                     stride=tuple(stride), padding=padding, block_h=block_h,
+                     block_n=block_n, interpret=interpret)
+
+
+def _on_dendritic_register(_name: str) -> None:
+    _diff_conv_op.cache_clear()
+    _conv_jit.clear_cache()
+
+
+dendritic.on_register(_on_dendritic_register)

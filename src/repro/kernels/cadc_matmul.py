@@ -12,20 +12,48 @@ the same output block; m/n are "parallel"). VMEM working set per step:
 bm*xbar + xbar*bn (inputs, x dtype) + bm*bn fp32 accumulator — with
 bm=bn=256, xbar=256, bf16 inputs: 0.25 + 0.25 + 0.25 MB, far under 16 MB
 VMEM; MXU dims are multiples of 128 by construction.
+
+Gradients (this file's custom_vjp rules)
+----------------------------------------
+Because f() is applied per segment BEFORE accumulation, the op is NOT a
+plain matmul under autodiff: with p_s = x_s @ w_s and y = sum_s f(p_s),
+
+    dx_s = (g ⊙ f'(p_s)) @ w_sᵀ      dw_s = x_sᵀ @ (g ⊙ f'(p_s))
+
+where g is the output cotangent. The forward kernel therefore emits a second
+output — the per-segment gate f'(p_s), computed in-VREG while the psum tile
+is live — instead of saving O(M·S·N) fp32 psums: for relu the gate is just
+the bitmask p_s > 0 (bool storage, see dendritic.gate_dtype), and identity
+saves nothing. Both backward contractions run as Pallas kernels with the
+same (parallel, parallel, arbitrary) grid family as the forward:
+
+  * dx: grid (M/bm, S, N/bk), contracting over N, dx block [bm, xbar];
+  * dw: grid (S, N/bn, M/bk), contracting over M, dw block [xbar, bn].
+
+The q8 path (int8 activations x ternary codes) gets a straight-through VJP:
+grads are computed against the integer values as-if-fp32 (scaled by the
+shared fp32 scale), cotangents for genuinely-int primals degrade to float0,
+and d(scale) falls out for free as <dw_unscaled, w> (since dw_s/scale =
+x_sᵀ(g ⊙ mask_s), summing dw ⊙ w over all segments telescopes to exactly
+sum g ⊙ mask ⊙ psum_int).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dendritic
 
 Array = jnp.ndarray
+
+# jax 0.4.x exposes TPUCompilerParams; newer versions renamed it.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, n_segments: int):
@@ -35,6 +63,26 @@ def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, n_segments: int):
         x_ref[...], w_ref[...], preferred_element_type=jnp.float32
     )
     fps = fn(psum)  # IMA: dendritic f() fused in VREG, per segment.
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = fps
+
+    @pl.when(s > 0)
+    def _acc():
+        o_ref[...] += fps
+
+
+def _kernel_with_gate(x_ref, w_ref, o_ref, g_ref, *, fn: Callable,
+                      gate_fn: Callable, n_segments: int):
+    """Forward for the VJP: additionally writes the gate f'(psum) while the
+    psum tile is still in VREGs — the residual the backward consumes."""
+    s = pl.program_id(2)
+    psum = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    fps = fn(psum)
+    g_ref[...] = gate_fn(psum).astype(g_ref.dtype)[None]
 
     @pl.when(s == 0)
     def _init():
@@ -67,6 +115,103 @@ def _q8_kernel(x_ref, w_ref, scale_ref, o_ref, *, fn: Callable, n_segments: int)
         o_ref[...] += fps
 
 
+def _q8_kernel_with_gate(x_ref, w_ref, scale_ref, o_ref, g_ref, *,
+                         fn: Callable, gate_fn: Callable, n_segments: int):
+    s = pl.program_id(2)
+    psum_i32 = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    psum = psum_i32.astype(jnp.float32) * scale_ref[0, 0]
+    fps = fn(psum)
+    g_ref[...] = gate_fn(psum).astype(g_ref.dtype)[None]
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = fps
+
+    @pl.when(s > 0)
+    def _acc():
+        o_ref[...] += fps
+
+
+# ---------------------------------------------------------------------------
+# Backward Pallas kernels: the two segmented MXU contractions of the VJP.
+# ---------------------------------------------------------------------------
+
+def _bwd_dx_kernel(g_ref, m_ref, w_ref, o_ref):
+    """dx block [bm, xbar] for segment s = sum_k (g ⊙ mask)[bm,bk] @ w[xbar,bk]ᵀ."""
+    k = pl.program_id(2)
+    gm = g_ref[...] * m_ref[0].astype(jnp.float32)
+    part = jax.lax.dot_general(
+        gm, w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def _bwd_dx_kernel_nomask(g_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+    part = jax.lax.dot_general(
+        g_ref[...], w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def _bwd_dw_kernel(x_ref, g_ref, m_ref, o_ref):
+    """dw block [xbar, bn] for segment s = sum_k x[bk,xbar]ᵀ @ (g ⊙ mask)[bk,bn]."""
+    k = pl.program_id(2)
+    gm = g_ref[...] * m_ref[0].astype(jnp.float32)
+    part = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), gm,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def _bwd_dw_kernel_nomask(x_ref, g_ref, o_ref):
+    k = pl.program_id(2)
+    part = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), g_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
 def _pad_to(x: Array, axis: int, mult: int) -> Array:
     d = x.shape[axis]
     pad = (-d) % mult
@@ -75,6 +220,261 @@ def _pad_to(x: Array, axis: int, mult: int) -> Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _dim_sem(n: int = 3):
+    return CompilerParams(dimension_semantics=("parallel",) * (n - 1) + ("arbitrary",))
+
+
+def _fwd_pallas(xp, wp, *, f, gate_fn, gate_dt, xbar, bm, bn, interpret,
+                scale2=None):
+    """Run the (optionally gate-emitting) forward on pre-padded operands."""
+    mp, dp = xp.shape
+    np_ = wp.shape[1]
+    n_seg = dp // xbar
+    grid = (mp // bm, np_ // bn, n_seg)
+    with_gate = gate_dt is not None
+    quantized = scale2 is not None
+
+    in_specs = [
+        pl.BlockSpec((bm, xbar), lambda i, j, s: (i, s)),
+        pl.BlockSpec((xbar, bn), lambda i, j, s: (s, j)),
+    ]
+    operands = [xp, wp]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, s: (0, 0), memory_space=pl.ANY)
+        )
+        operands.append(scale2)
+
+    out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+    out_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    if with_gate:
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((1, bm, bn), lambda i, j, s: (s, i, j)),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((n_seg, mp, np_), gate_dt),
+        ]
+        body = _q8_kernel_with_gate if quantized else _kernel_with_gate
+        body = functools.partial(body, fn=f, gate_fn=gate_fn, n_segments=n_seg)
+    else:
+        body = _q8_kernel if quantized else _kernel
+        body = functools.partial(body, fn=f, n_segments=n_seg)
+
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=_dim_sem(),
+        interpret=interpret,
+    )(*operands)
+
+
+def _segmented_bwd(
+    g: Array,
+    x2: Array,
+    w: Array,
+    gate: Optional[Array],
+    *,
+    crossbar_size: int,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+) -> Tuple[Array, Array]:
+    """The shared VJP contraction pair on UNPADDED 2-D operands.
+
+    g [m, n] output cotangent, x2 [m, d], w [d, n], gate [S, m, n] or None
+    (identity). Returns (dx [m, d], dw [d, n]) in fp32. Also reused by the
+    conv VJP with x2 = im2col patches.
+    """
+    m, d = x2.shape
+    n = w.shape[1]
+    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+    wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+    gp = _pad_to(_pad_to(g.astype(jnp.float32), 1, block_n), 0, block_m)
+    mp, dp = xp.shape
+    np_ = wp.shape[1]
+    n_seg = dp // crossbar_size
+
+    args_dx = [gp]
+    args_dw = [xp, gp]
+    if gate is not None:
+        gatep = _pad_to(_pad_to(gate, 2, block_n), 1, block_m)
+        dx_body, dw_body = _bwd_dx_kernel, _bwd_dw_kernel
+        dx_specs = [
+            pl.BlockSpec((block_m, block_n), lambda i, s, k: (i, k)),
+            pl.BlockSpec((1, block_m, block_n), lambda i, s, k: (s, i, k)),
+            pl.BlockSpec((crossbar_size, block_n), lambda i, s, k: (s, k)),
+        ]
+        dw_specs = [
+            pl.BlockSpec((block_m, crossbar_size), lambda s, j, k: (k, s)),
+            pl.BlockSpec((block_m, block_n), lambda s, j, k: (k, j)),
+            pl.BlockSpec((1, block_m, block_n), lambda s, j, k: (s, k, j)),
+        ]
+        args_dx = [gp, gatep]
+        args_dw = [xp, gp, gatep]
+    else:
+        dx_body, dw_body = _bwd_dx_kernel_nomask, _bwd_dw_kernel_nomask
+        dx_specs = [
+            pl.BlockSpec((block_m, block_n), lambda i, s, k: (i, k)),
+            pl.BlockSpec((crossbar_size, block_n), lambda i, s, k: (s, k)),
+        ]
+        dw_specs = [
+            pl.BlockSpec((block_m, crossbar_size), lambda s, j, k: (k, s)),
+            pl.BlockSpec((block_m, block_n), lambda s, j, k: (k, j)),
+        ]
+    args_dx.append(wp)
+
+    dx = pl.pallas_call(
+        dx_body,
+        grid=(mp // block_m, n_seg, np_ // block_n),
+        in_specs=dx_specs,
+        out_specs=pl.BlockSpec((block_m, crossbar_size), lambda i, s, k: (i, s)),
+        out_shape=jax.ShapeDtypeStruct((mp, dp), jnp.float32),
+        compiler_params=_dim_sem(),
+        interpret=interpret,
+    )(*args_dx)
+    dw = pl.pallas_call(
+        dw_body,
+        grid=(n_seg, np_ // block_n, mp // block_m),
+        in_specs=dw_specs,
+        out_specs=pl.BlockSpec((crossbar_size, block_n), lambda s, j, k: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, np_), jnp.float32),
+        compiler_params=_dim_sem(),
+        interpret=interpret,
+    )(*args_dw)
+    return dx[:m, :d], dw[:d, :n]
+
+
+def _float0_zeros(x: Array):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _resolve_gate(fn: str):
+    """(f, gate_fn, gate_dtype) for a registered fn; gate_fn None when the
+    fn has no derivative (the op factories then skip the VJP — forward-only,
+    matching the XLA-only-training contract of dendritic.register)."""
+    f = dendritic.get(fn)
+    try:
+        return f, dendritic.grad(fn), dendritic.gate_dtype(fn)
+    except ValueError:
+        return f, None, None
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
+                    interpret: bool):
+    """custom_vjp op over unpadded 2-D (x, w), statics baked in (cached so
+    repeated traces under jit reuse one op identity). A fn registered
+    without a derivative still runs forward-only (no VJP attached)."""
+    f, gate_fn, gate_dt = _resolve_gate(fn)
+
+    def _run(x2, w, with_gate):
+        m, d = x2.shape
+        n = w.shape[1]
+        xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+        wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+        out = _fwd_pallas(
+            xp, wp, f=f, gate_fn=gate_fn,
+            gate_dt=gate_dt if with_gate else None,
+            xbar=crossbar_size, bm=block_m, bn=block_n, interpret=interpret,
+        )
+        if with_gate:
+            y, gate = out
+            return y[:m, :n], gate[:, :m, :n]
+        return out[:m, :n], None
+
+    if gate_fn is None:
+        return lambda x2, w: _run(x2, w, with_gate=False)[0]
+
+    @jax.custom_vjp
+    def op(x2, w):
+        return _run(x2, w, with_gate=False)[0]
+
+    def op_fwd(x2, w):
+        y, gate = _run(x2, w, with_gate=gate_dt is not None)
+        return y, (x2, w, gate)
+
+    def op_bwd(res, g):
+        x2, w, gate = res
+        dx, dw = _segmented_bwd(
+            g, x2, w, gate, crossbar_size=crossbar_size,
+            block_m=block_m, block_n=block_n, interpret=interpret,
+        )
+        return dx.astype(x2.dtype), dw.astype(w.dtype)
+
+    op.defvjp(op_fwd, op_bwd)
+    return op
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
+                       interpret: bool):
+    """Straight-through custom_vjp over (x_q, w_codes, scale).
+
+    Cotangents for the integer codes are computed as-if-fp32 (STE) and only
+    materialize when the primal is a float array (e.g. fake-quant training);
+    genuinely-int primals receive float0. d(scale) = <dw/scale, w> — see
+    module docstring. A fn without a registered derivative runs
+    forward-only (no VJP attached).
+    """
+    f, gate_fn, gate_dt = _resolve_gate(fn)
+
+    def _run(x2, w, scale, with_gate):
+        m, d = x2.shape
+        n = w.shape[1]
+        xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+        wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+        scale2 = scale.reshape(1, 1).astype(jnp.float32)
+        out = _fwd_pallas(
+            xp, wp, f=f, gate_fn=gate_fn,
+            gate_dt=gate_dt if with_gate else None,
+            xbar=crossbar_size, bm=block_m, bn=block_n, interpret=interpret,
+            scale2=scale2,
+        )
+        if with_gate:
+            y, gate = out
+            return y[:m, :n], gate[:, :m, :n]
+        return out[:m, :n], None
+
+    if gate_fn is None:
+        return lambda x2, w, scale: _run(x2, w, scale, with_gate=False)[0]
+
+    @jax.custom_vjp
+    def op(x2, w, scale):
+        return _run(x2, w, scale, with_gate=False)[0]
+
+    def op_fwd(x2, w, scale):
+        y, gate = _run(x2, w, scale, with_gate=gate_dt is not None)
+        return y, (x2, w, scale, gate)
+
+    def op_bwd(res, g):
+        x2, w, scale, gate = res
+        s32 = scale.astype(jnp.float32).reshape(())
+        dxu, dwu = _segmented_bwd(
+            g, x2, w, gate, crossbar_size=crossbar_size,
+            block_m=block_m, block_n=block_n, interpret=interpret,
+        )
+        # y = sum_s f(scale * p_s): chain rule adds one scale factor to
+        # dx/dw, and d(scale) telescopes to <dw_unscaled, w>.
+        dscale = jnp.vdot(dwu, w.astype(jnp.float32)).astype(jnp.float32)
+        dx = (s32 * dxu)
+        dw = (s32 * dwu)
+        return (
+            dx.astype(x2.dtype) if jnp.issubdtype(x2.dtype, jnp.floating)
+            else _float0_zeros(x2),
+            dw.astype(w.dtype) if jnp.issubdtype(w.dtype, jnp.floating)
+            else _float0_zeros(w),
+            dscale.reshape(scale.shape).astype(scale.dtype),
+        )
+
+    op.defvjp(op_fwd, op_bwd)
+    return op
 
 
 @functools.partial(
@@ -94,37 +494,16 @@ def cadc_matmul_pallas(
     """y[M,N] = sum_s f( x[:, s*xbar:(s+1)*xbar] @ w[s*xbar:(s+1)*xbar, :] ).
 
     x: [M, D] (or [..., D], flattened internally), w: [D, N]. Output fp32.
+    Differentiable: jax.grad flows through the saved-gate custom_vjp whose
+    backward is itself two segmented Pallas kernels (module docstring).
     """
-    f = dendritic.get(fn)
     *lead, d = x.shape
     n = w.shape[1]
     if w.shape[0] != d:
         raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
-    x2 = x.reshape(-1, d)
-    m = x2.shape[0]
-
-    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
-    wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
-    mp, dp = xp.shape
-    np_ = wp.shape[1]
-    n_seg = dp // crossbar_size
-    grid = (mp // block_m, np_ // block_n, n_seg)
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, fn=f, n_segments=n_seg),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, crossbar_size), lambda i, j, s: (i, s)),
-            pl.BlockSpec((crossbar_size, block_n), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(xp, wp)
-    return out[:m, :n].reshape(*lead, n)
+    op = _diff_matmul_op(crossbar_size, fn, block_m, block_n, interpret)
+    y = op(x.reshape(-1, d), w)
+    return y.reshape(*lead, n)
 
 
 @functools.partial(
@@ -143,36 +522,24 @@ def cadc_matmul_q8_pallas(
     interpret: bool = False,
 ) -> Array:
     """Quantized CADC: x_q int8 [M, D], w_codes int8 {-1,0,1} [D, N],
-    scale fp32 scalar (input_lsb * weight_alpha). Output fp32."""
-    f = dendritic.get(fn)
+    scale fp32 scalar (input_lsb * weight_alpha). Output fp32.
+    Differentiable wrt scale always, and wrt x_q/w_codes straight-through
+    when they are float arrays (QAT); int primals get float0 cotangents."""
     *lead, d = x_q.shape
     n = w_codes.shape[1]
-    x2 = x_q.reshape(-1, d)
-    m = x2.shape[0]
+    op = _diff_matmul_q8_op(crossbar_size, fn, block_m, block_n, interpret)
+    y = op(x_q.reshape(-1, d), w_codes, jnp.asarray(scale))
+    return y.reshape(*lead, n)
 
-    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
-    wp = _pad_to(_pad_to(w_codes, 0, crossbar_size), 1, block_n)
-    mp, dp = xp.shape
-    np_ = wp.shape[1]
-    n_seg = dp // crossbar_size
-    grid = (mp // block_m, np_ // block_n, n_seg)
-    scale2 = scale.reshape(1, 1).astype(jnp.float32)
 
-    out = pl.pallas_call(
-        functools.partial(_q8_kernel, fn=f, n_segments=n_seg),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, crossbar_size), lambda i, j, s: (i, s)),
-            pl.BlockSpec((crossbar_size, block_n), lambda i, j, s: (s, j)),
-            pl.BlockSpec(
-                (1, 1), lambda i, j, s: (0, 0), memory_space=pl.ANY
-            ),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(xp, wp, scale2)
-    return out[:m, :n].reshape(*lead, n)
+def _on_dendritic_register(_name: str) -> None:
+    """Drop compiled ops when a dendritic fn is (re-)registered — both the
+    op factories and the jit wrappers cache on the fn NAME, which would
+    otherwise keep serving the old callable."""
+    _diff_matmul_op.cache_clear()
+    _diff_matmul_q8_op.cache_clear()
+    cadc_matmul_pallas.clear_cache()
+    cadc_matmul_q8_pallas.clear_cache()
+
+
+dendritic.on_register(_on_dendritic_register)

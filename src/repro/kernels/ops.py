@@ -6,6 +6,12 @@
   * "xla"        — core.cadc einsum formulation (always available; the
                    distribution layer uses this: it shards cleanly)
   * "auto"       — pallas on TPU, xla otherwise
+
+Every impl is gradient-aware: the Pallas paths carry jax.custom_vjp rules
+(saved-gate backward kernels, see kernels/cadc_matmul.py) so `impl="auto"`
+is valid under jax.grad on every backend — training no longer needs to
+detour through the XLA einsum path, which now serves as the autodiff
+reference oracle for the fused kernels.
 """
 from __future__ import annotations
 

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (independent of core/)."""
+"""Pure-jnp oracles for every Pallas kernel (independent of core/).
+
+Segment accumulation is SEQUENTIAL (python loop over S, s=0 first) to mirror
+the kernels' innermost "arbitrary" grid dimension exactly — jnp.sum over a
+segment axis reduces in a different fp32 order and breaks the q8 path's
+bit-exactness guarantee by one ulp.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -6,6 +12,14 @@ import jax.numpy as jnp
 from repro.core import dendritic
 
 Array = jnp.ndarray
+
+
+def _seq_sum(fps: Array) -> Array:
+    """Sum [..., S, N] over S in the kernel's sequential order."""
+    acc = fps[..., 0, :]
+    for s in range(1, fps.shape[-2]):
+        acc = acc + fps[..., s, :]
+    return acc
 
 
 def _segments(x: Array, w: Array, xbar: int):
@@ -26,7 +40,7 @@ def cadc_matmul_ref(x: Array, w: Array, *, crossbar_size: int, fn: str) -> Array
     xs, ws = _segments(x.astype(jnp.float32), w.astype(jnp.float32), crossbar_size)
     psums = jnp.einsum("...sk,skn->...sn", xs, ws,
                        preferred_element_type=jnp.float32)
-    return jnp.sum(f(psums), axis=-2)
+    return _seq_sum(f(psums))
 
 
 def cadc_matmul_q8_ref(
@@ -39,4 +53,4 @@ def cadc_matmul_q8_ref(
     psums_i = jnp.einsum("...sk,skn->...sn", xs, ws,
                          preferred_element_type=jnp.int32)
     psums = psums_i.astype(jnp.float32) * scale.astype(jnp.float32)
-    return jnp.sum(f(psums), axis=-2)
+    return _seq_sum(f(psums))

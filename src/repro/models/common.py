@@ -33,6 +33,14 @@ class LayerMode:
     quant: QuantConfig = FP32
     adc: Optional[adc_lib.AdcConfig] = None
     collect_stats: bool = False
+    # Kernel backend for the segmented contraction: 'xla' (einsum,
+    # shardable, always available), 'pallas'/'interpret'/'auto' route
+    # through the fused Pallas kernels — differentiable via their
+    # custom_vjp rules, so training works on any setting. Falls back to
+    # the XLA path per layer when psum stats or the ADC model are
+    # requested (those need materialized psums, which the fused kernel
+    # never writes out).
+    kernel: str = "xla"
 
     def dendritic_fn(self) -> str:
         return self.fn if self.impl == "cadc" else "identity"
@@ -102,12 +110,29 @@ def conv_init(key, k1, k2, cin, cout, *, dtype=jnp.float32) -> Params:
 # forward ops
 # ---------------------------------------------------------------------------
 
+def _use_fused(mode: LayerMode, want_ps: bool) -> bool:
+    """Route through the Pallas kernels? Only when nothing needs the
+    materialized psums (stats sink / ADC transform) — the fused kernel
+    never writes them to HBM, which is the point."""
+    return mode.kernel != "xla" and not want_ps and mode.adc is None
+
+
 def linear_forward(p: Params, x: Array, ctx: Ctx, *, name: str = "fc") -> Array:
+    from repro.kernels import ops as kops
+
     mode = ctx.mode
     w = mode.quant.quant_weight(p["w"])
     xq = mode.quant.quant_input(x)
     segs = cadc_lib.num_segments(w.shape[0], mode.crossbar_size)
     want_ps = mode.collect_stats and segs > 1
+    if _use_fused(mode, want_ps):
+        y = kops.cadc_matmul(
+            xq, w, crossbar_size=mode.crossbar_size, fn=mode.dendritic_fn(),
+            impl=mode.kernel,
+        )
+        if "b" in p:
+            y = y + p["b"]
+        return y
     out = cadc_lib.cadc_matmul(
         xq,
         w,
@@ -135,12 +160,19 @@ def conv_forward(
     padding="SAME",
     name: str = "conv",
 ) -> Array:
+    from repro.kernels import ops as kops
+
     mode = ctx.mode
     w = mode.quant.quant_weight(p["w"])
     xq = mode.quant.quant_input(x)
     k1, k2, cin, _ = w.shape
     segs = cadc_lib.num_segments(k1 * k2 * cin, mode.crossbar_size)
     want_ps = mode.collect_stats and segs > 1
+    if _use_fused(mode, want_ps):
+        return kops.cadc_conv2d(
+            xq, w, crossbar_size=mode.crossbar_size, fn=mode.dendritic_fn(),
+            stride=stride, padding=padding, impl=mode.kernel,
+        )
     out = conv_lib.cadc_conv2d(
         xq,
         w,

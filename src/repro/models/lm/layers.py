@@ -63,6 +63,23 @@ def linear_apply(p: Params, x: Array, cfg: ArchConfig) -> Array:
     acc = cdtype(cfg) if cfg.bf16_wire else jnp.float32
     if w.ndim == 3:  # segmented CADC weight [S, xbar, d_out]
         s, xbar, d_out = w.shape
+        if cfg.kernel_impl != "xla":
+            # Fused Pallas path (differentiable custom_vjp): flatten the
+            # segment axis back to the contraction dim; the kernel re-blocks
+            # at xbar. Bypasses bf16_wire (fp32 psum accumulation in VMEM —
+            # strictly tighter numerics, no cross-chip psum wire here).
+            from repro.kernels import ops as kops
+
+            xp = cadc_lib.pad_to_segments(x, -1, xbar)
+            y = kops.cadc_matmul(
+                xp.astype(cdtype(cfg)),
+                w.reshape(s * xbar, d_out).astype(cdtype(cfg)),
+                crossbar_size=xbar, fn=cfg.dendritic_fn,
+                impl=cfg.kernel_impl,
+            ).astype(cdtype(cfg))
+            if "b" in p:
+                y = y + p["b"].astype(y.dtype)
+            return y
         xp = cadc_lib.pad_to_segments(x, -1, xbar)
         xs = xp.reshape(*x.shape[:-1], s, xbar).astype(cdtype(cfg))
         f = dendritic.get(cfg.dendritic_fn)

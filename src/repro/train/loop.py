@@ -32,6 +32,12 @@ class TrainConfig:
     ckpt_every: int = 100
     keep_k: int = 2
     seed: int = 0
+    # Kernel backend override for every weight-bearing layer: None keeps
+    # the LayerMode's own setting; 'xla' | 'pallas' | 'interpret' | 'auto'
+    # force it. The Pallas paths train end-to-end through the fused
+    # kernels' custom_vjp (gradient parity with 'xla' — tests/
+    # test_kernel_grads.py).
+    kernel: Optional[str] = None
 
 
 def cross_entropy(logits: Array, labels: Array) -> Array:
@@ -100,6 +106,10 @@ def train(
     """Returns {'params', 'state', 'history', 'eval'} — restartable via
     cfg.ckpt_dir (picks up the latest complete checkpoint)."""
     optimizer = optimizer or opt_lib.adamw(1e-3)
+    if cfg.kernel is not None:
+        mode = dataclasses.replace(mode, kernel=cfg.kernel)
+        if eval_mode is not None:
+            eval_mode = dataclasses.replace(eval_mode, kernel=cfg.kernel)
     key = jax.random.PRNGKey(cfg.seed)
     params, model_state = init_fn(key, **(init_kwargs or {}))
     opt_state = optimizer.init(params)

@@ -1,0 +1,69 @@
+"""`hypothesis` import shim: property tests still run without the package.
+
+Real hypothesis is used when installed (`pip install -e .[dev]`). Otherwise
+these stand-ins replay each @given test on a DERANDOMIZED example stream —
+a seeded random.Random(0), so every run and every machine executes the same
+examples. Only the strategy surface this repo uses is implemented
+(`st.integers`, `st.sampled_from`); extend here before reaching for more.
+
+Usage (in test modules; tests/ is on sys.path under pytest's prepend
+import mode):
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # (random.Random) -> value
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    st = _FallbackStrategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                # kwargs are non-strategy params (e.g. pytest fixtures,
+                # still visible in the exposed signature) — forward them.
+                rnd = random.Random(0)
+                n = getattr(wrapper, "_max_examples",
+                            getattr(f, "_max_examples", 10))
+                for _ in range(n):
+                    drawn = {k: s.sample(rnd) for k, s in strategies.items()}
+                    f(*args, **kwargs, **drawn)
+
+            # pytest must not treat the drawn params as fixtures: expose a
+            # signature with only the non-strategy params (e.g. `self`).
+            sig = inspect.signature(f)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

@@ -1,0 +1,43 @@
+"""Shared pytest config + fixtures for the CADC repro suite.
+
+Import path: `pip install -e .` or pytest's `pythonpath = ["src"]`
+(pyproject.toml) both work; the sys.path fallback below additionally covers
+bare `pytest` invocations with neither (e.g. an IDE runner).
+
+Markers are declared in pyproject.toml ([tool.pytest.ini_options]);
+`slow` gates the multi-process / large-shape tests out of tier-1.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, _SRC)
+
+
+@pytest.fixture
+def rng_key():
+    """Deterministic base PRNG key; fold_in per-use for independence."""
+    import jax
+
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def kernel_interp():
+    """Kwargs running the matmul Pallas kernels in interpret mode with
+    blocks small enough that CPU interpret stays fast."""
+    return dict(interpret=True, block_m=16, block_n=16)
+
+
+@pytest.fixture
+def xbar_grid():
+    """The paper's crossbar-size sweep (Fig. 5 / Table II)."""
+    return (64, 128, 256)

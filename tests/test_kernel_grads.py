@@ -1,0 +1,309 @@
+"""jax.grad through the Pallas kernels (interpret) == XLA autodiff oracle.
+
+The custom_vjp rules (kernels/cadc_matmul.py, cadc_conv.py) must reproduce
+the gradients of the core einsum formulation — the reference oracle — to
+max|delta| <= 1e-4 across the paper's crossbar sweep, dendritic fns, strides
+and ragged (non-multiple) D / Cout shapes. Also: one-step training parity
+(xla vs interpret impl, same loss), the q8 straight-through path, and the
+dendritic derivative registry (a freshly registered fn gets a working VJP).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cadc as core_cadc
+from repro.core import conv as core_conv
+from repro.core import dendritic
+from repro.kernels import ops, ref
+from repro.kernels.cadc_conv import cadc_conv2d_pallas
+from repro.kernels.cadc_matmul import cadc_matmul_pallas, cadc_matmul_q8_pallas
+
+KEY = jax.random.PRNGKey(0)
+TOL = 1e-4  # acceptance bound on max|grad delta|
+
+XBARS = [64, 128, 256]
+FNS = ["relu", "identity"]
+
+
+def _grads(f, *args, argnums=(0, 1)):
+    """d/dargs of <f(args), r> with a fixed non-uniform cotangent r."""
+    y = f(*args)
+    r = jax.random.normal(jax.random.fold_in(KEY, 99), y.shape)
+    return jax.grad(lambda *a: jnp.vdot(f(*a), r), argnums=argnums)(*args)
+
+
+class TestMatmulGrads:
+    @pytest.mark.parametrize("xbar", XBARS)
+    @pytest.mark.parametrize("fn", FNS)
+    def test_matches_xla_oracle(self, xbar, fn):
+        # D deliberately NOT a multiple of xbar (ragged last segment), and
+        # m/n not multiples of the block sizes (padding edges).
+        m, d, n = 10, 2 * xbar + 17, 21
+        x = jax.random.normal(jax.random.fold_in(KEY, d), (m, d))
+        w = jax.random.normal(jax.random.fold_in(KEY, d + 1), (d, n)) / 16
+
+        def pallas_op(a, b):
+            return ops.cadc_matmul(a, b, crossbar_size=xbar, fn=fn,
+                                   impl="interpret", block_m=16, block_n=16)
+
+        def xla_op(a, b):
+            return core_cadc.cadc_matmul(a, b, crossbar_size=xbar, fn=fn)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(xla_op, x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    @pytest.mark.parametrize("fn", ["sublinear", "supralinear", "tanh"])
+    def test_curved_fns(self, fn):
+        """fp32 gate storage path (non-indicator derivatives)."""
+        x = jax.random.normal(jax.random.fold_in(KEY, 7), (12, 150))
+        w = jax.random.normal(jax.random.fold_in(KEY, 8), (150, 18)) / 12
+
+        def pallas_op(a, b):
+            return ops.cadc_matmul(a, b, crossbar_size=64, fn=fn,
+                                   impl="interpret", block_m=16, block_n=16)
+
+        def xla_op(a, b):
+            return core_cadc.cadc_matmul(a, b, crossbar_size=64, fn=fn)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(xla_op, x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    def test_leading_batch_dims(self):
+        x = jax.random.normal(jax.random.fold_in(KEY, 9), (2, 5, 130))
+        w = jax.random.normal(jax.random.fold_in(KEY, 10), (130, 11)) / 12
+
+        def pallas_op(a, b):
+            return cadc_matmul_pallas(a, b, crossbar_size=64, fn="relu",
+                                      block_m=16, block_n=16, interpret=True)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(
+            lambda a, b: core_cadc.cadc_matmul(a, b, crossbar_size=64,
+                                               fn="relu"), x, w)
+        assert gx.shape == x.shape and gw.shape == w.shape
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+
+class TestConvGrads:
+    @pytest.mark.parametrize("xbar", XBARS)
+    @pytest.mark.parametrize("fn", FNS)
+    @pytest.mark.parametrize("stride", [(1, 1), (2, 2)])
+    def test_matches_xla_oracle(self, xbar, fn, stride):
+        # D = 3*3*20 = 180: ragged vs 64/128, single-segment vs 256;
+        # cout=10 is not a lane multiple (padding edges).
+        x = jax.random.normal(jax.random.fold_in(KEY, xbar), (2, 10, 10, 20))
+        w = jax.random.normal(jax.random.fold_in(KEY, xbar + 1),
+                              (3, 3, 20, 10)) * 0.1
+
+        def pallas_op(a, b):
+            return cadc_conv2d_pallas(a, b, crossbar_size=xbar, fn=fn,
+                                      stride=stride, padding="SAME",
+                                      interpret=True)
+
+        def xla_op(a, b):
+            return core_conv.cadc_conv2d(a, b, crossbar_size=xbar, fn=fn,
+                                         stride=stride, padding="SAME")
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(xla_op, x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    def test_valid_padding(self):
+        x = jax.random.normal(jax.random.fold_in(KEY, 31), (1, 9, 9, 12))
+        w = jax.random.normal(jax.random.fold_in(KEY, 32), (3, 3, 12, 7)) * 0.1
+
+        def pallas_op(a, b):
+            return cadc_conv2d_pallas(a, b, crossbar_size=32, fn="relu",
+                                      padding="VALID", interpret=True)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(
+            lambda a, b: core_conv.cadc_conv2d(a, b, crossbar_size=32,
+                                               fn="relu", padding="VALID"),
+            x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+
+class TestQ8Grads:
+    def test_scale_grad_int_inputs(self):
+        """d/d(scale) flows even with genuinely-int8 codes (the int primals
+        get float0 cotangents)."""
+        kx, kw = jax.random.split(jax.random.fold_in(KEY, 41))
+        x_q = jax.random.randint(kx, (12, 150), -7, 8, jnp.int8)
+        w_c = jax.random.randint(kw, (150, 9), -1, 2, jnp.int8)
+        scale = jnp.float32(0.731)
+        r = jax.random.normal(jax.random.fold_in(KEY, 42), (12, 9))
+
+        g = jax.grad(lambda s: jnp.vdot(cadc_matmul_q8_pallas(
+            x_q, w_c, s, crossbar_size=64, fn="relu", block_m=16,
+            block_n=16, interpret=True), r))(scale)
+        h = jax.grad(lambda s: jnp.vdot(ref.cadc_matmul_q8_ref(
+            x_q, w_c, s, crossbar_size=64, fn="relu"), r))(scale)
+        # dscale is O(|y|)-sized; compare relatively.
+        assert abs(float(g - h)) <= TOL * max(1.0, abs(float(h)))
+
+    def test_straight_through_float_codes(self):
+        """QAT shape: float arrays holding quantized values get exact STE
+        gradients (as if the int cast were identity)."""
+        kx, kw = jax.random.split(jax.random.fold_in(KEY, 43))
+        xf = jax.random.randint(kx, (10, 140), -7, 8, jnp.int8).astype(
+            jnp.float32)
+        wf = jax.random.randint(kw, (140, 8), -1, 2, jnp.int8).astype(
+            jnp.float32)
+        scale = jnp.float32(0.5)
+        r = jax.random.normal(jax.random.fold_in(KEY, 44), (10, 8))
+
+        def float_oracle(a, b, s):
+            # f'(0) = 0 convention (matches the saved relu bitmask; exact-
+            # zero psums are COMMON with integer data, where jnp.maximum
+            # would split the tie).
+            relu0 = lambda p: jnp.where(p > 0, p, 0.0)
+            xbar, S = 64, 3
+            pad = S * xbar - 140
+            ap = jnp.pad(a, ((0, 0), (0, pad)))
+            bp = jnp.pad(b, ((0, pad), (0, 0)))
+            acc = 0.0
+            for i in range(S):
+                acc = acc + relu0(
+                    s * (ap[:, i * xbar:(i + 1) * xbar]
+                         @ bp[i * xbar:(i + 1) * xbar]))
+            return acc
+
+        def pallas_op(a, b, s):
+            return cadc_matmul_q8_pallas(a, b, s, crossbar_size=64,
+                                         fn="relu", block_m=16, block_n=16,
+                                         interpret=True)
+
+        gx, gw, gs = _grads(pallas_op, xf, wf, scale, argnums=(0, 1, 2))
+        hx, hw, hs = _grads(float_oracle, xf, wf, scale, argnums=(0, 1, 2))
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+        assert abs(float(gs - hs)) <= TOL * max(1.0, abs(float(hs)))
+
+
+class TestDendriticRegistry:
+    def test_grad_registry_complete(self):
+        for name in dendritic.DENDRITIC_FNS:
+            assert callable(dendritic.grad(name))
+
+    def test_unknown_fn_raises(self):
+        with pytest.raises(ValueError):
+            dendritic.grad("nope")
+
+    def test_fn_without_grad_runs_forward_only(self):
+        """register(name, fn) with no grad_fn: the Pallas forward must
+        still work (no VJP attached — seed behavior)."""
+        name = "_test_nograd"
+        dendritic.register(name, lambda p: jnp.where(p > 0, p * 2.0, 0.0))
+        try:
+            x = jax.random.normal(jax.random.fold_in(KEY, 61), (6, 70))
+            w = jax.random.normal(jax.random.fold_in(KEY, 62), (70, 9)) / 8
+            got = cadc_matmul_pallas(x, w, crossbar_size=32, fn=name,
+                                     block_m=8, block_n=8, interpret=True)
+            want = core_cadc.cadc_matmul(
+                x, w, crossbar_size=32,
+                fn=lambda p: jnp.where(p > 0, p * 2.0, 0.0))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        finally:
+            dendritic.DENDRITIC_FNS.pop(name, None)
+
+    def test_reregister_invalidates_compiled_ops(self):
+        """Re-registering a name must not serve a stale compiled op: the
+        kernels' caches key on the fn NAME and are dropped via the
+        dendritic.on_register hooks."""
+        name = "_test_rereg"
+        x = jax.random.normal(jax.random.fold_in(KEY, 71), (4, 70))
+        w = jax.random.normal(jax.random.fold_in(KEY, 72), (70, 9)) / 8
+        try:
+            dendritic.register(name, lambda p: jnp.where(p > 0, p, 0.0))
+            y1 = cadc_matmul_pallas(x, w, crossbar_size=32, fn=name,
+                                    block_m=8, block_n=8, interpret=True)
+            # add a derivative: jax.grad must now work...
+            dendritic.register(name, lambda p: jnp.where(p > 0, p, 0.0),
+                               lambda p: (p > 0).astype(p.dtype))
+            gx = jax.grad(lambda a: jnp.sum(cadc_matmul_pallas(
+                a, w, crossbar_size=32, fn=name, block_m=8, block_n=8,
+                interpret=True)))(x)
+            assert gx.shape == x.shape
+            # ...and a changed primal must produce new numerics.
+            dendritic.register(name, lambda p: jnp.where(p > 0, 2.0 * p, 0.0),
+                               lambda p: 2.0 * (p > 0).astype(p.dtype))
+            y2 = cadc_matmul_pallas(x, w, crossbar_size=32, fn=name,
+                                    block_m=8, block_n=8, interpret=True)
+            np.testing.assert_allclose(np.asarray(y2), 2.0 * np.asarray(y1),
+                                       rtol=1e-6, atol=1e-6)
+        finally:
+            dendritic.DENDRITIC_FNS.pop(name, None)
+            dendritic.DENDRITIC_GRADS.pop(name, None)
+            dendritic.GATE_DTYPES.pop(name, None)
+
+    def test_relu_tie_convention_matches_kernel_mask(self):
+        """The xla oracle's relu subgradient at psum == 0 is 0 — same as
+        the kernels' saved bitmask (exact-zero psums are common with
+        padded / quantized data; jnp.maximum would split the tie)."""
+        assert float(jax.grad(dendritic.relu)(0.0)) == 0.0
+
+    def test_registered_fn_gets_vjp(self):
+        """A custom f() + f' registered at runtime trains through the
+        Pallas kernel with no kernel changes."""
+        name = "_test_leaky"
+        dendritic.register(
+            name,
+            lambda p: jnp.where(p > 0, p, 0.1 * p),
+            lambda p: jnp.where(p > 0, 1.0, 0.1),
+            gate=jnp.float32,
+        )
+        try:
+            x = jax.random.normal(jax.random.fold_in(KEY, 51), (8, 100))
+            w = jax.random.normal(jax.random.fold_in(KEY, 52), (100, 12)) / 10
+
+            def pallas_op(a, b):
+                return cadc_matmul_pallas(a, b, crossbar_size=32, fn=name,
+                                          block_m=8, block_n=8,
+                                          interpret=True)
+
+            def xla_op(a, b):
+                return core_cadc.cadc_matmul(
+                    a, b, crossbar_size=32,
+                    fn=lambda p: jnp.where(p > 0, p, 0.1 * p))
+
+            gx, gw = _grads(pallas_op, x, w)
+            hx, hw = _grads(xla_op, x, w)
+            assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+            assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+        finally:
+            dendritic.DENDRITIC_FNS.pop(name, None)
+            dendritic.DENDRITIC_GRADS.pop(name, None)
+            dendritic.GATE_DTYPES.pop(name, None)
+
+
+class TestTrainParity:
+    def test_one_step_loss_parity(self):
+        """train/loop.py: one optimizer step through impl='xla' vs
+        'interpret' produces the same loss trajectory."""
+        from repro.data import synthetic
+        from repro.models.cnn import lenet5
+        from repro.models.common import LayerMode
+        from repro.train import loop, optimizer
+
+        data = synthetic.make_classification_dataset(
+            synthetic.ClassificationSpec(n_classes=10, hw=28, channels=1))
+        losses = {}
+        for kernel in ["xla", "interpret"]:
+            mode = LayerMode(impl="cadc", crossbar_size=64, fn="relu")
+            cfg = loop.TrainConfig(steps=1, batch_size=8, eval_every=1,
+                                   eval_batches=1, kernel=kernel)
+            out = loop.train(init_fn=lenet5.init, apply_fn=lenet5.apply,
+                             batch_fn=data, mode=mode,
+                             optimizer=optimizer.adamw(1e-3), cfg=cfg)
+            losses[kernel] = [h["loss"] for h in out["history"]]
+        np.testing.assert_allclose(losses["xla"], losses["interpret"],
+                                   rtol=1e-4, atol=1e-4)

@@ -7,12 +7,7 @@ import pytest
 from repro.kernels import cadc_matmul as pk
 from repro.kernels import ops, ref
 
-try:
-    from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover
-    HAVE_HYPOTHESIS = False
+from _hypothesis_compat import given, settings, st
 
 
 def rand(shape, k=0, dtype=jnp.float32):
@@ -140,21 +135,19 @@ class TestOpsDispatch:
         assert got.shape == (4, 4)
 
 
-if HAVE_HYPOTHESIS:
-
-    class TestKernelProperties:
-        @given(
-            m=st.integers(1, 64),
-            d=st.integers(1, 300),
-            n=st.integers(1, 64),
-            xbar=st.sampled_from([32, 64, 128, 256]),
+class TestKernelProperties:
+    @given(
+        m=st.integers(1, 64),
+        d=st.integers(1, 300),
+        n=st.integers(1, 64),
+        xbar=st.sampled_from([32, 64, 128, 256]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_kernel_matches_oracle_any_shape(self, m, d, n, xbar):
+        x, w = rand((m, d), k=m * 7 + d), rand((d, n), k=n * 13 + 1)
+        got = pk.cadc_matmul_pallas(
+            x, w, crossbar_size=xbar, fn="relu", block_m=16, block_n=16,
+            interpret=True,
         )
-        @settings(max_examples=20, deadline=None)
-        def test_kernel_matches_oracle_any_shape(self, m, d, n, xbar):
-            x, w = rand((m, d), k=m * 7 + d), rand((d, n), k=n * 13 + 1)
-            got = pk.cadc_matmul_pallas(
-                x, w, crossbar_size=xbar, fn="relu", block_m=16, block_n=16,
-                interpret=True,
-            )
-            want = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn="relu")
-            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
