@@ -28,6 +28,13 @@ def main():
                     help="segmented-matmul backend; 'auto' trains through "
                          "the fused Pallas kernels (custom_vjp) on TPU and "
                          "the XLA einsum elsewhere")
+    ap.add_argument("--save-gate", default="auto",
+                    choices=["auto", "packed", "bytes", "recompute"],
+                    help="gradient-residual format of the fused kernels: "
+                         "'auto' bit-packs the relu gate to uint32 bitmask "
+                         "words (8x less residual HBM than byte-bools); "
+                         "'recompute' saves nothing and re-derives the gate "
+                         "in the backward (flops-for-bytes)")
     args = ap.parse_args()
 
     data = synthetic.make_classification_dataset(
@@ -35,7 +42,7 @@ def main():
                                      noise=0.8))
     cfg = loop.TrainConfig(steps=args.steps, batch_size=args.batch,
                            eval_every=max(1, args.steps // 6), eval_batches=8,
-                           kernel=args.kernel)
+                           kernel=args.kernel, save_gate=args.save_gate)
 
     results = {}
     for label, mode in [

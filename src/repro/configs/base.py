@@ -88,6 +88,11 @@ class ArchConfig:
     # route through the fused Pallas kernels (kernels/ops.py), which are
     # differentiable via custom_vjp — valid under jax.grad everywhere.
     kernel_impl: str = "xla"
+    # Gradient-residual format of the fused kernels ('auto' | 'packed' |
+    # 'bytes' | 'recompute'): 'auto' bit-packs indicator gates (relu) to
+    # uint32 bitmask words (8x less residual HBM than byte-bools);
+    # 'recompute' saves nothing and re-derives the gate in the backward.
+    kernel_save_gate: str = "auto"
 
     # ---- numerics / execution ----
     dtype: str = "bfloat16"

@@ -13,9 +13,11 @@ evaluate IN the forward kernel (the per-segment "gate"): the backward pass
 then only needs `cotangent * gate` per segment, never the raw psums.
 `gate_dtype(name)` picks the narrowest storage for that gate: relu's
 derivative is a {0,1} indicator, so the forward saves a bool mask (1 byte,
-4x smaller than fp32 psums; a true bitmask on hardware); identity needs no
-gate at all (None); curved fns store fp32. Use `register()` to add a new
-f() + f'() pair — the Pallas VJPs pick it up with no kernel changes.
+4x smaller than fp32 psums); identity needs no gate at all (None); curved
+fns store fp32. `gate_packing(name)` additionally marks indicator gates
+the kernels may lane-pack into uint32 bitmask words — a TRUE bitmask,
+8x denser than the byte-bool. Use `register()` to add a new f() + f'()
+pair — the Pallas VJPs pick it up with no kernel changes.
 """
 from __future__ import annotations
 
@@ -115,6 +117,18 @@ GATE_DTYPES: Dict[str, Optional[jnp.dtype]] = {
     "tanh": jnp.float32,
 }
 
+# Whether f'(psum) is a {0,1} indicator that the Pallas kernels may
+# lane-pack into uint32 bitmask words (32 gates/word — 8x less residual
+# HBM than a byte-bool, 32x less than fp32). Only sound when every gate
+# value is exactly 0 or 1; curved fns store real-valued gates.
+GATE_PACKING: Dict[str, bool] = {
+    "identity": False,
+    "relu": True,
+    "sublinear": False,
+    "supralinear": False,
+    "tanh": False,
+}
+
 
 def get(name: str) -> Callable[[Array], Array]:
     try:
@@ -151,6 +165,15 @@ def gate_dtype(name: str) -> Optional[jnp.dtype]:
         ) from None
 
 
+def gate_packing(name: str) -> bool:
+    """True when f'(psum) is a {0,1} indicator the kernels may bit-pack
+    (uint32 bitmask residuals). False for unknown/curved/identity fns —
+    unlike grad()/gate_dtype() this never raises for fns registered
+    without a derivative: packability simply defaults to off."""
+    get(name)
+    return GATE_PACKING.get(name, False)
+
+
 # Called with the fn name on every (re-)registration; the kernel modules
 # append cache-invalidation hooks here so a re-registered name never serves
 # a stale compiled op (their op factories + jit wrappers cache on the name).
@@ -167,12 +190,16 @@ def register(
     grad_fn: Optional[Callable[[Array], Array]] = None,
     *,
     gate: Optional[jnp.dtype] = jnp.float32,
+    gate_packing: bool = False,
 ) -> None:
     """Register a dendritic f() (and optionally f') under `name`.
 
     With grad_fn provided, the Pallas kernel VJPs differentiate through the
     new nonlinearity with zero kernel changes; without it, only the XLA
     autodiff path can train through it (Pallas runs forward-only).
+    gate_packing=True opts the fn into the kernels' uint32 bitmask
+    residuals — ONLY valid when grad_fn returns exact {0,1} indicators
+    (relu-style); the packed format stores one bit per gate.
     Re-registering a name invalidates the kernels' compiled-op caches.
     """
     DENDRITIC_FNS[name] = fn
@@ -187,8 +214,12 @@ def register(
             )
         DENDRITIC_GRADS[name] = grad_fn
         GATE_DTYPES[name] = gate
+        GATE_PACKING[name] = bool(gate_packing)
     else:
+        if gate_packing:
+            raise ValueError("gate_packing requires a grad_fn")
         DENDRITIC_GRADS.pop(name, None)
         GATE_DTYPES.pop(name, None)
+        GATE_PACKING.pop(name, None)
     for hook in _REGISTER_HOOKS:
         hook(name)

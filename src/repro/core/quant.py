@@ -8,7 +8,7 @@ the paper trains quantized models (Fig. 9 "Quantization and test results").
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,22 @@ def _ste(x: Array, q: Array) -> Array:
     return x + jax.lax.stop_gradient(q - x)
 
 
+def _symmetric_scale(x: Array, axis: Optional[int] = None) -> Array:
+    """Per-tensor (axis=None) or per-axis clipped max|x| scale — the ONE
+    definition both the fake-quant and the int8-code paths use."""
+    if axis is None:
+        scale = jnp.max(jnp.abs(x))
+    else:
+        scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(scale, 1e-8)
+
+
+def _symmetric_levels(x: Array, scale: Array, bits: int) -> Array:
+    """Integer level index round(clip(x/scale) * (2^(b-1)-1)) — fp32."""
+    levels = 2 ** (bits - 1) - 1
+    return jnp.round(jnp.clip(x / scale, -1.0, 1.0) * levels)
+
+
 def quantize_symmetric(
     x: Array, bits: int, *, axis: Optional[int] = None, ste: bool = True
 ) -> Array:
@@ -31,25 +47,26 @@ def quantize_symmetric(
     if bits >= 32:
         return x
     levels = 2 ** (bits - 1) - 1
-    if axis is None:
-        scale = jnp.max(jnp.abs(x))
-    else:
-        scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.round(jnp.clip(x / scale, -1.0, 1.0) * levels) / levels * scale
+    scale = _symmetric_scale(x, axis)
+    q = _symmetric_levels(x, scale, bits) / levels * scale
     return _ste(x, q) if ste else q
 
 
-def ternarize(w: Array, *, ste: bool = True) -> Array:
-    """Ternary weight network quantizer (the paper's 2-bit weights).
-
-    TWN rule: threshold delta = 0.7 * mean|w|; alpha = mean |w| over the
-    supra-threshold set. w_q in {-alpha, 0, +alpha}.
-    """
+def _ternary_stats(w: Array) -> Tuple[Array, Array]:
+    """(mask, alpha) of the TWN rule: delta = 0.7 * mean|w|; alpha =
+    mean |w| over the supra-threshold set. The single source of truth the
+    q8 kernels' 'alpha * codes == ternarize(w)' contract rests on."""
     absw = jnp.abs(w)
     delta = 0.7 * jnp.mean(absw)
     mask = absw > delta
     alpha = jnp.sum(absw * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return mask, alpha
+
+
+def ternarize(w: Array, *, ste: bool = True) -> Array:
+    """Ternary weight network quantizer (the paper's 2-bit weights).
+    w_q in {-alpha, 0, +alpha} per the TWN rule (_ternary_stats)."""
+    mask, alpha = _ternary_stats(w)
     q = alpha * jnp.sign(w) * mask
     return _ste(w, q) if ste else q
 
@@ -57,9 +74,30 @@ def ternarize(w: Array, *, ste: bool = True) -> Array:
 def ternary_codes(w: Array) -> Array:
     """{-1, 0, +1} int8 codes + implicit per-tensor alpha — the bit-exact
     crossbar storage format (used by the packed Pallas kernel and tests)."""
-    absw = jnp.abs(w)
-    delta = 0.7 * jnp.mean(absw)
-    return (jnp.sign(w) * (absw > delta)).astype(jnp.int8)
+    mask, _ = _ternary_stats(w)
+    return (jnp.sign(w) * mask).astype(jnp.int8)
+
+
+def ternary_decompose(w: Array) -> Tuple[Array, Array]:
+    """(codes int8 {-1,0,+1}, alpha fp32) such that alpha * codes ==
+    ternarize(w, ste=False) — the exact operands of the int8-native q8
+    kernels (cadc_matmul_q8 / cadc_conv2d_q8)."""
+    mask, alpha = _ternary_stats(w)
+    codes = (jnp.sign(w) * mask).astype(jnp.int8)
+    return codes, alpha.astype(jnp.float32)
+
+
+def quantize_codes(x: Array, bits: int) -> Tuple[Array, Array]:
+    """(codes int8, lsb fp32) with lsb * codes == the fake-quant
+    quantize_symmetric(x, bits, ste=False) values (up to one fp32
+    re-association of scale/levels) — per-tensor scale, bits <= 8.
+    The int8-native kernel input format."""
+    if bits > 8:
+        raise ValueError(f"int8 codes need bits <= 8, got {bits}")
+    levels = 2 ** (bits - 1) - 1
+    scale = _symmetric_scale(x)
+    codes = _symmetric_levels(x, scale, bits).astype(jnp.int8)
+    return codes, (scale / levels).astype(jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,7 +3,10 @@
 # kernel. Leave this package empty if the paper has none.
 #
 # Layout: cadc_matmul.py / cadc_conv.py hold the fused Pallas kernels AND
-# their custom_vjp backward kernels (saved-gate design — the forward emits
-# f'(psum) per segment, the backward runs the two segmented MXU
-# contractions as Pallas kernels). ops.py is the gradient-aware dispatch;
-# ref.py holds sequential-accumulation jnp oracles.
+# their custom_vjp backward kernels. Forward kernels loop crossbar
+# segments in-body over a VMEM scratch accumulator (one output write per
+# tile); the VJP forward emits f'(psum) per segment as a uint32 bit-packed
+# bitmask / byte gate, or skips the residual entirely in
+# save_gate="recompute" mode (the backward re-derives it on the MXU).
+# ops.py is the gradient-aware dispatch; ref.py holds
+# sequential-accumulation jnp oracles (incl. the bit-exact q8 conv oracle).

@@ -1,41 +1,76 @@
 """Pallas TPU kernel: CADC segmented matmul with fused dendritic f().
 
 TPU adaptation of the paper's crossbar pipeline (DESIGN.md §2): the
-contraction dim D = S * xbar is blocked at the crossbar size; each grid step
-computes one crossbar's psum tile on the MXU, applies f() in VREGs (the IMA),
-and accumulates into the output tile resident in VMEM (the psum adder).
-Psums therefore never touch HBM — the fusion IS the zero-compression win on
-this hardware.
+contraction dim D = S * xbar is blocked at the crossbar size INSIDE the
+kernel body — the grid is (M/bm, N/bn), both parallel, and each kernel
+instance loops its S segments over a VMEM scratch accumulator:
 
-Grid: (M/bm, N/bn, S), S innermost ("arbitrary" = sequential revisiting of
-the same output block; m/n are "parallel"). VMEM working set per step:
-bm*xbar + xbar*bn (inputs, x dtype) + bm*bn fp32 accumulator — with
-bm=bn=256, xbar=256, bf16 inputs: 0.25 + 0.25 + 0.25 MB, far under 16 MB
-VMEM; MXU dims are multiples of 128 by construction.
+    acc = 0
+    for s in range(S):                      # static, unrolled
+        psum = x[:, s*xbar:(s+1)*xbar] @ w[s*xbar:(s+1)*xbar, :]   # MXU
+        acc += f(psum)                      # IMA fused in VREG
+    out[...] = acc                          # ONE output write per tile
 
-Gradients (this file's custom_vjp rules)
-----------------------------------------
+Psums never touch HBM and — unlike the previous S-deep "arbitrary" grid
+axis with an O(S) pl.when dispatch chain — the output tile is written
+exactly once instead of being revisited S times, and the per-segment weight
+slice is a proper k-loop the pipeliner can double-buffer. The VMEM working
+set per step is bm*D + D*bn (inputs, x dtype) + bm*bn fp32 scratch: with
+bm=bn=256, D=2048, bf16 inputs that is 1+1+0.25 MB, far under 16 MB.
+
+Gradient residuals (save_gate)
+------------------------------
 Because f() is applied per segment BEFORE accumulation, the op is NOT a
 plain matmul under autodiff: with p_s = x_s @ w_s and y = sum_s f(p_s),
 
     dx_s = (g ⊙ f'(p_s)) @ w_sᵀ      dw_s = x_sᵀ @ (g ⊙ f'(p_s))
 
-where g is the output cotangent. The forward kernel therefore emits a second
-output — the per-segment gate f'(p_s), computed in-VREG while the psum tile
-is live — instead of saving O(M·S·N) fp32 psums: for relu the gate is just
-the bitmask p_s > 0 (bool storage, see dendritic.gate_dtype), and identity
-saves nothing. Both backward contractions run as Pallas kernels with the
-same (parallel, parallel, arbitrary) grid family as the forward:
+where g is the output cotangent. Instead of saving O(M·S·N) fp32 psums, the
+forward emits the per-segment gate f'(p_s) in one of three formats, chosen
+by the `save_gate` knob (resolved per dendritic fn):
+
+  * "packed"     — for indicator gates (dendritic.gate_packing, e.g. relu's
+                   p_s > 0 bitmask): 32 gate bits lane-packed into one
+                   uint32 word along N. Residual bytes S·M·N/8 — 8x less
+                   HBM than the byte-bool, 32x less than fp32. Requires
+                   block_n % 32 == 0.
+  * "bytes"      — one element of dendritic.gate_dtype per gate (bool for
+                   relu = S·M·N bytes, fp32 for curved fns = 4·S·M·N).
+  * "recompute"  — NO residual (zero bytes): the backward kernels re-derive
+                   the gate with one extra MXU matmul per block
+                   (p_s = x_s @ w_s, gate = f'(p_s)) — flops-for-bytes, the
+                   right trade when HBM, not MXU, is the bottleneck.
+  * "auto"       — packed when the fn opts in and block_n allows, else
+                   bytes. identity saves nothing in every mode.
+
+Residual bytes per mode (M, N padded to block multiples, S = ceil(D/xbar)):
+
+    packed    S*M*N/8        bytes     S*M*N*itemsize(gate_dtype)
+    recompute 0              fp32 psums (never saved) would be 4*S*M*N
+
+Both backward contractions run as Pallas kernels with an (parallel,
+parallel, arbitrary) grid:
 
   * dx: grid (M/bm, S, N/bk), contracting over N, dx block [bm, xbar];
   * dw: grid (S, N/bn, M/bk), contracting over M, dw block [xbar, bn].
+
+The packed backward unpacks the uint32 words in-VREG right before the
+g ⊙ gate product; the recompute backward receives the x/w blocks it needs
+anyway plus a (1,1) scale operand (1.0 for the float path) so the q8
+variant recomputes gate = f'(scale * psum) exactly as the forward saw it.
 
 The q8 path (int8 activations x ternary codes) gets a straight-through VJP:
 grads are computed against the integer values as-if-fp32 (scaled by the
 shared fp32 scale), cotangents for genuinely-int primals degrade to float0,
 and d(scale) falls out for free as <dw_unscaled, w> (since dw_s/scale =
 x_sᵀ(g ⊙ mask_s), summing dw ⊙ w over all segments telescopes to exactly
-sum g ⊙ mask ⊙ psum_int).
+sum g ⊙ mask ⊙ psum_int). Int8-valued psums are < 2^24 so the fp32
+recompute of the integer psum in the backward is exact.
+
+Mosaic note: the pack/unpack reshape [m, n] <-> [m, n/32, 32] reduces over
+the minor-most axis; whether that lowers to an efficient lane shuffle on
+real TPU is part of the ROADMAP wall-clock validation pass (interpret-mode
+correctness is CI-verified).
 """
 from __future__ import annotations
 
@@ -55,95 +90,118 @@ Array = jnp.ndarray
 # jax 0.4.x exposes TPUCompilerParams; newer versions renamed it.
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
+# Gate bits per packed residual word (uint32 lane packing along N).
+GATE_PACK_WIDTH = 32
 
-def _kernel(x_ref, w_ref, o_ref, *, fn: Callable, n_segments: int):
-    s = pl.program_id(2)
-    # One crossbar tile on the MXU; psum in fp32 (the "ADC-read" quantity).
-    psum = jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+SAVE_GATE_MODES = ("auto", "packed", "bytes", "recompute")
+
+
+def _pack_mask(gate: Array) -> Array:
+    """[m, n] indicator gate -> [m, n/32] uint32, bit b of word w = gate
+    column 32*w + b (n % 32 == 0). Nonzero gate values map to set bits."""
+    m, n = gate.shape
+    nw = n // GATE_PACK_WIDTH
+    bits = (gate != 0).astype(jnp.uint32).reshape(m, nw, GATE_PACK_WIDTH)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (m, nw, GATE_PACK_WIDTH), 2)
+    # bits are disjoint per lane, so a dtype-pinned sum IS the bitwise or.
+    return jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
+
+
+def _unpack_mask(words: Array) -> Array:
+    """[m, nw] uint32 -> [m, nw*32] fp32 {0,1} gate (inverse of _pack_mask)."""
+    m, nw = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (m, nw, GATE_PACK_WIDTH), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(m, nw * GATE_PACK_WIDTH).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernels: grid (M/bm, N/bn), segments looped in-body over a VMEM
+# scratch accumulator — one output write per tile.
+# ---------------------------------------------------------------------------
+
+def _seg_psum(x_ref, w_ref, s: int, xbar: int) -> Array:
+    return jnp.dot(
+        x_ref[:, s * xbar:(s + 1) * xbar],
+        w_ref[s * xbar:(s + 1) * xbar, :],
+        preferred_element_type=jnp.float32,
     )
-    fps = fn(psum)  # IMA: dendritic f() fused in VREG, per segment.
-
-    @pl.when(s == 0)
-    def _init():
-        o_ref[...] = fps
-
-    @pl.when(s > 0)
-    def _acc():
-        o_ref[...] += fps
 
 
-def _kernel_with_gate(x_ref, w_ref, o_ref, g_ref, *, fn: Callable,
-                      gate_fn: Callable, n_segments: int):
-    """Forward for the VJP: additionally writes the gate f'(psum) while the
-    psum tile is still in VREGs — the residual the backward consumes."""
-    s = pl.program_id(2)
-    psum = jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+def _seg_psum_q8(x_ref, w_ref, scale_ref, s: int, xbar: int) -> Array:
+    psum_i32 = jnp.dot(
+        x_ref[:, s * xbar:(s + 1) * xbar].astype(jnp.int32),
+        w_ref[s * xbar:(s + 1) * xbar, :].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
     )
-    fps = fn(psum)
-    g_ref[...] = gate_fn(psum).astype(g_ref.dtype)[None]
-
-    @pl.when(s == 0)
-    def _init():
-        o_ref[...] = fps
-
-    @pl.when(s > 0)
-    def _acc():
-        o_ref[...] += fps
+    return psum_i32.astype(jnp.float32) * scale_ref[0, 0]
 
 
-def _q8_kernel(x_ref, w_ref, scale_ref, o_ref, *, fn: Callable, n_segments: int):
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, fn: Callable, n_seg: int,
+            xbar: int):
+    for s in range(n_seg):
+        fps = fn(_seg_psum(x_ref, w_ref, s, xbar))
+        if s == 0:
+            acc_ref[...] = fps
+        else:
+            acc_ref[...] += fps
+    o_ref[...] = acc_ref[...]
+
+
+def _kernel_with_gate(x_ref, w_ref, o_ref, g_ref, acc_ref, *, fn: Callable,
+                      gate_fn: Callable, n_seg: int, xbar: int, packed: bool):
+    """VJP forward: also writes each segment's gate f'(psum) while the psum
+    tile is still in VREGs — packed to uint32 words when `packed`."""
+    for s in range(n_seg):
+        psum = _seg_psum(x_ref, w_ref, s, xbar)
+        gate = gate_fn(psum)
+        g_ref[s] = _pack_mask(gate) if packed else gate.astype(g_ref.dtype)
+        fps = fn(psum)
+        if s == 0:
+            acc_ref[...] = fps
+        else:
+            acc_ref[...] += fps
+    o_ref[...] = acc_ref[...]
+
+
+def _q8_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, fn: Callable,
+               n_seg: int, xbar: int):
     """Quantized variant: int8 activations x int8 ternary codes -> int32
-    psums on the MXU, rescaled to fp32 before f(). scale_ref is (1,1) SMEM
+    psums on the MXU, rescaled to fp32 before f(). scale_ref is (1,1)
     fp32 = (input_scale * weight_alpha)."""
-    s = pl.program_id(2)
-    psum_i32 = jnp.dot(
-        x_ref[...].astype(jnp.int32),
-        w_ref[...].astype(jnp.int32),
-        preferred_element_type=jnp.int32,
-    )
-    psum = psum_i32.astype(jnp.float32) * scale_ref[0, 0]
-    fps = fn(psum)
-
-    @pl.when(s == 0)
-    def _init():
-        o_ref[...] = fps
-
-    @pl.when(s > 0)
-    def _acc():
-        o_ref[...] += fps
+    for s in range(n_seg):
+        fps = fn(_seg_psum_q8(x_ref, w_ref, scale_ref, s, xbar))
+        if s == 0:
+            acc_ref[...] = fps
+        else:
+            acc_ref[...] += fps
+    o_ref[...] = acc_ref[...]
 
 
-def _q8_kernel_with_gate(x_ref, w_ref, scale_ref, o_ref, g_ref, *,
-                         fn: Callable, gate_fn: Callable, n_segments: int):
-    s = pl.program_id(2)
-    psum_i32 = jnp.dot(
-        x_ref[...].astype(jnp.int32),
-        w_ref[...].astype(jnp.int32),
-        preferred_element_type=jnp.int32,
-    )
-    psum = psum_i32.astype(jnp.float32) * scale_ref[0, 0]
-    fps = fn(psum)
-    g_ref[...] = gate_fn(psum).astype(g_ref.dtype)[None]
-
-    @pl.when(s == 0)
-    def _init():
-        o_ref[...] = fps
-
-    @pl.when(s > 0)
-    def _acc():
-        o_ref[...] += fps
+def _q8_kernel_with_gate(x_ref, w_ref, scale_ref, o_ref, g_ref, acc_ref, *,
+                         fn: Callable, gate_fn: Callable, n_seg: int,
+                         xbar: int, packed: bool):
+    for s in range(n_seg):
+        psum = _seg_psum_q8(x_ref, w_ref, scale_ref, s, xbar)
+        gate = gate_fn(psum)
+        g_ref[s] = _pack_mask(gate) if packed else gate.astype(g_ref.dtype)
+        fps = fn(psum)
+        if s == 0:
+            acc_ref[...] = fps
+        else:
+            acc_ref[...] += fps
+    o_ref[...] = acc_ref[...]
 
 
 # ---------------------------------------------------------------------------
 # Backward Pallas kernels: the two segmented MXU contractions of the VJP.
 # ---------------------------------------------------------------------------
 
-def _bwd_dx_kernel(g_ref, m_ref, w_ref, o_ref):
+def _bwd_dx_kernel(g_ref, m_ref, w_ref, o_ref, *, packed: bool):
     """dx block [bm, xbar] for segment s = sum_k (g ⊙ mask)[bm,bk] @ w[xbar,bk]ᵀ."""
     k = pl.program_id(2)
-    gm = g_ref[...] * m_ref[0].astype(jnp.float32)
+    mask = _unpack_mask(m_ref[0]) if packed else m_ref[0].astype(jnp.float32)
+    gm = g_ref[...] * mask
     part = jax.lax.dot_general(
         gm, w_ref[...].astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
@@ -176,10 +234,35 @@ def _bwd_dx_kernel_nomask(g_ref, w_ref, o_ref):
         o_ref[...] += part
 
 
-def _bwd_dw_kernel(x_ref, g_ref, m_ref, o_ref):
+def _bwd_dx_kernel_recompute(g_ref, x_ref, w_ref, scale_ref, o_ref, *,
+                             gate_fn: Callable):
+    """save_gate='recompute': re-derive the gate from the segment psum
+    (one extra MXU matmul) instead of reading a residual from HBM."""
+    k = pl.program_id(2)
+    wf = w_ref[...].astype(jnp.float32)
+    psum = jnp.dot(x_ref[...].astype(jnp.float32), wf,
+                   preferred_element_type=jnp.float32) * scale_ref[0, 0]
+    gm = g_ref[...] * gate_fn(psum).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        gm, wf,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def _bwd_dw_kernel(x_ref, g_ref, m_ref, o_ref, *, packed: bool):
     """dw block [xbar, bn] for segment s = sum_k x[bk,xbar]ᵀ @ (g ⊙ mask)[bk,bn]."""
     k = pl.program_id(2)
-    gm = g_ref[...] * m_ref[0].astype(jnp.float32)
+    mask = _unpack_mask(m_ref[0]) if packed else m_ref[0].astype(jnp.float32)
+    gm = g_ref[...] * mask
     part = jax.lax.dot_general(
         x_ref[...].astype(jnp.float32), gm,
         dimension_numbers=(((0,), (0,)), ((), ())),
@@ -212,6 +295,28 @@ def _bwd_dw_kernel_nomask(x_ref, g_ref, o_ref):
         o_ref[...] += part
 
 
+def _bwd_dw_kernel_recompute(x_ref, g_ref, w_ref, scale_ref, o_ref, *,
+                             gate_fn: Callable):
+    k = pl.program_id(2)
+    xf = x_ref[...].astype(jnp.float32)
+    psum = jnp.dot(xf, w_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale_ref[0, 0]
+    gm = g_ref[...] * gate_fn(psum).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        xf, gm,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += part
+
+
 def _pad_to(x: Array, axis: int, mult: int) -> Array:
     d = x.shape[axis]
     pad = (-d) % mult
@@ -222,47 +327,65 @@ def _pad_to(x: Array, axis: int, mult: int) -> Array:
     return jnp.pad(x, widths)
 
 
+def _fit_axis(x: Array, axis: int, size: int) -> Array:
+    """Zero-pad or slice `axis` to exactly `size` elements."""
+    d = x.shape[axis]
+    if d < size:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, size - d)
+        return jnp.pad(x, widths)
+    if d > size:
+        return jax.lax.slice_in_dim(x, 0, size, axis=axis)
+    return x
+
+
 def _dim_sem(n: int = 3):
     return CompilerParams(dimension_semantics=("parallel",) * (n - 1) + ("arbitrary",))
 
 
-def _fwd_pallas(xp, wp, *, f, gate_fn, gate_dt, xbar, bm, bn, interpret,
-                scale2=None):
-    """Run the (optionally gate-emitting) forward on pre-padded operands."""
+def _fwd_pallas(xp, wp, *, f, gate_fn, gate_mode, gate_dt, xbar, bm, bn,
+                interpret, scale2=None):
+    """Run the forward on pre-padded operands. gate_mode 'packed'/'bytes'
+    adds the gate residual output; anything else runs residual-free."""
     mp, dp = xp.shape
     np_ = wp.shape[1]
     n_seg = dp // xbar
-    grid = (mp // bm, np_ // bn, n_seg)
-    with_gate = gate_dt is not None
+    grid = (mp // bm, np_ // bn)
+    with_gate = gate_mode in ("packed", "bytes")
     quantized = scale2 is not None
 
     in_specs = [
-        pl.BlockSpec((bm, xbar), lambda i, j, s: (i, s)),
-        pl.BlockSpec((xbar, bn), lambda i, j, s: (s, j)),
+        pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),
+        pl.BlockSpec((dp, bn), lambda i, j: (0, j)),
     ]
     operands = [xp, wp]
     if quantized:
         in_specs.append(
-            pl.BlockSpec((1, 1), lambda i, j, s: (0, 0), memory_space=pl.ANY)
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pl.ANY)
         )
         operands.append(scale2)
 
-    out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+    out_specs = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     out_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
+    kw = dict(fn=f, n_seg=n_seg, xbar=xbar)
     if with_gate:
+        packed = gate_mode == "packed"
+        gw = bn // GATE_PACK_WIDTH if packed else bn
+        gn = np_ // GATE_PACK_WIDTH if packed else np_
+        gdt = jnp.uint32 if packed else gate_dt
         out_specs = [
             out_specs,
-            pl.BlockSpec((1, bm, bn), lambda i, j, s: (s, i, j)),
+            pl.BlockSpec((n_seg, bm, gw), lambda i, j: (0, i, j)),
         ]
         out_shape = [
             out_shape,
-            jax.ShapeDtypeStruct((n_seg, mp, np_), gate_dt),
+            jax.ShapeDtypeStruct((n_seg, mp, gn), gdt),
         ]
         body = _q8_kernel_with_gate if quantized else _kernel_with_gate
-        body = functools.partial(body, fn=f, gate_fn=gate_fn, n_segments=n_seg)
+        body = functools.partial(body, gate_fn=gate_fn, packed=packed, **kw)
     else:
         body = _q8_kernel if quantized else _kernel
-        body = functools.partial(body, fn=f, n_segments=n_seg)
+        body = functools.partial(body, **kw)
 
     return pl.pallas_call(
         body,
@@ -270,7 +393,10 @@ def _fwd_pallas(xp, wp, *, f, gate_fn, gate_dt, xbar, bm, bn, interpret,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        compiler_params=_dim_sem(),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
         interpret=interpret,
     )(*operands)
 
@@ -285,12 +411,26 @@ def _segmented_bwd(
     block_m: int,
     block_n: int,
     interpret: bool,
+    gate_fn: Optional[Callable] = None,
+    scale: Optional[Array] = None,
+    gate_packed: bool = False,
 ) -> Tuple[Array, Array]:
     """The shared VJP contraction pair on UNPADDED 2-D operands.
 
-    g [m, n] output cotangent, x2 [m, d], w [d, n], gate [S, m, n] or None
-    (identity). Returns (dx [m, d], dw [d, n]) in fp32. Also reused by the
-    conv VJP with x2 = im2col patches.
+    g [m, n] output cotangent, x2 [m, d], w [d, n]. The gate residual
+    selects the mode:
+
+      * gate + gate_packed=True  — [S, m', nw] uint32 bitmask words,
+        unpacked in-VREG (the caller states the format explicitly: a
+        custom fn may legitimately store non-packed uint32 gate VALUES);
+      * gate + gate_packed=False — [S, m', n'] one gate element per psum;
+      * gate None, gate_fn set   — recompute: gate re-derived from
+        f'(scale * x_s @ w_s) inside the backward kernels (scale defaults
+        to 1; the q8 path passes input_scale * alpha);
+      * gate None, gate_fn None  — identity (no mask applied).
+
+    Returns (dx [m, d], dw [d, n]) in fp32. Also reused by the conv VJP
+    with x2 = im2col patches.
     """
     m, d = x2.shape
     n = w.shape[1]
@@ -301,22 +441,53 @@ def _segmented_bwd(
     np_ = wp.shape[1]
     n_seg = dp // crossbar_size
 
-    args_dx = [gp]
-    args_dw = [xp, gp]
-    if gate is not None:
-        gatep = _pad_to(_pad_to(gate, 2, block_n), 1, block_m)
-        dx_body, dw_body = _bwd_dx_kernel, _bwd_dw_kernel
+    packed = gate is not None and gate_packed
+    recompute = gate is None and gate_fn is not None
+    if packed and block_n % GATE_PACK_WIDTH != 0:
+        raise ValueError(
+            f"packed gate backward needs block_n % {GATE_PACK_WIDTH} == 0, "
+            f"got {block_n}"
+        )
+
+    if recompute:
+        scale2 = (jnp.ones((1, 1), jnp.float32) if scale is None
+                  else jnp.asarray(scale, jnp.float32).reshape(1, 1))
+        dx_body = functools.partial(_bwd_dx_kernel_recompute, gate_fn=gate_fn)
+        dw_body = functools.partial(_bwd_dw_kernel_recompute, gate_fn=gate_fn)
+        scale_spec = lambda ix: pl.BlockSpec((1, 1), ix, memory_space=pl.ANY)
         dx_specs = [
             pl.BlockSpec((block_m, block_n), lambda i, s, k: (i, k)),
-            pl.BlockSpec((1, block_m, block_n), lambda i, s, k: (s, i, k)),
+            pl.BlockSpec((block_m, crossbar_size), lambda i, s, k: (i, s)),
+            pl.BlockSpec((crossbar_size, block_n), lambda i, s, k: (s, k)),
+            scale_spec(lambda i, s, k: (0, 0)),
+        ]
+        dw_specs = [
+            pl.BlockSpec((block_m, crossbar_size), lambda s, j, k: (k, s)),
+            pl.BlockSpec((block_m, block_n), lambda s, j, k: (k, j)),
+            pl.BlockSpec((crossbar_size, block_n), lambda s, j, k: (s, j)),
+            scale_spec(lambda s, j, k: (0, 0)),
+        ]
+        args_dx = [gp, xp, wp, scale2]
+        args_dw = [xp, gp, wp, scale2]
+    elif gate is not None:
+        gw = block_n // GATE_PACK_WIDTH if packed else block_n
+        gn = np_ // GATE_PACK_WIDTH if packed else np_
+        # The forward may have padded N at a different block granularity
+        # (the conv VJP re-blocks at 128): fit rows to mp, words/cols to gn.
+        gatep = _fit_axis(_fit_axis(gate, 1, mp), 2, gn)
+        dx_body = functools.partial(_bwd_dx_kernel, packed=packed)
+        dw_body = functools.partial(_bwd_dw_kernel, packed=packed)
+        dx_specs = [
+            pl.BlockSpec((block_m, block_n), lambda i, s, k: (i, k)),
+            pl.BlockSpec((1, block_m, gw), lambda i, s, k: (s, i, k)),
             pl.BlockSpec((crossbar_size, block_n), lambda i, s, k: (s, k)),
         ]
         dw_specs = [
             pl.BlockSpec((block_m, crossbar_size), lambda s, j, k: (k, s)),
             pl.BlockSpec((block_m, block_n), lambda s, j, k: (k, j)),
-            pl.BlockSpec((1, block_m, block_n), lambda s, j, k: (s, k, j)),
+            pl.BlockSpec((1, block_m, gw), lambda s, j, k: (s, k, j)),
         ]
-        args_dx = [gp, gatep]
+        args_dx = [gp, gatep, wp]
         args_dw = [xp, gp, gatep]
     else:
         dx_body, dw_body = _bwd_dx_kernel_nomask, _bwd_dw_kernel_nomask
@@ -328,7 +499,8 @@ def _segmented_bwd(
             pl.BlockSpec((block_m, crossbar_size), lambda s, j, k: (k, s)),
             pl.BlockSpec((block_m, block_n), lambda s, j, k: (k, j)),
         ]
-    args_dx.append(wp)
+        args_dx = [gp, wp]
+        args_dw = [xp, gp]
 
     dx = pl.pallas_call(
         dx_body,
@@ -366,38 +538,126 @@ def _resolve_gate(fn: str):
         return f, None, None
 
 
+def _resolve_gate_mode(save_gate: str, fn: str, gate_dt, block_n: int) -> str:
+    """Resolve the user-facing save_gate knob to a concrete residual mode:
+    'none' | 'packed' | 'bytes' | 'recompute' (module docstring)."""
+    if save_gate not in SAVE_GATE_MODES:
+        raise ValueError(
+            f"save_gate={save_gate!r}; choose from {SAVE_GATE_MODES}"
+        )
+    if gate_dt is None:
+        return "none"  # identity-like: f' ≡ 1, nothing to save or recompute
+    if save_gate == "recompute":
+        return "recompute"
+    packable = dendritic.gate_packing(fn) and block_n % GATE_PACK_WIDTH == 0
+    if save_gate == "packed":
+        if not packable:
+            raise ValueError(
+                f"save_gate='packed' needs an indicator gate "
+                f"(dendritic.gate_packing({fn!r}) is "
+                f"{dendritic.gate_packing(fn)}) and block_n % "
+                f"{GATE_PACK_WIDTH} == 0 (got {block_n})"
+            )
+        return "packed"
+    if save_gate == "bytes":
+        return "bytes"
+    return "packed" if packable else "bytes"
+
+
+def gate_residual_nbytes(
+    m: int,
+    d: int,
+    n: int,
+    *,
+    crossbar_size: int,
+    fn: str,
+    block_m: int = 256,
+    block_n: int = 256,
+    save_gate: str = "auto",
+) -> int:
+    """Analytic HBM bytes of the gate residual the VJP forward saves for an
+    [m, d] @ [d, n] CADC matmul — the quantity kernel_bench budgets."""
+    _, gate_fn, gate_dt = _resolve_gate(fn)
+    if gate_fn is None:
+        return 0
+    mode = _resolve_gate_mode(save_gate, fn, gate_dt, block_n)
+    if mode in ("none", "recompute"):
+        return 0
+    mp = -(-m // block_m) * block_m
+    np_ = -(-n // block_n) * block_n
+    s = -(-d // crossbar_size)
+    if mode == "packed":
+        return s * mp * (np_ // GATE_PACK_WIDTH) * 4
+    return s * mp * np_ * jnp.dtype(gate_dt).itemsize
+
+
+def cadc_matmul_fwd_residuals(
+    x2: Array,
+    w: Array,
+    *,
+    crossbar_size: int,
+    fn: str,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = True,
+    save_gate: str = "auto",
+) -> Tuple[Array, Optional[Array]]:
+    """Bench/debug entry: run the VJP forward and return (y, gate residual
+    or None) so the residual's actual size/dtype can be inspected."""
+    f, gate_fn, gate_dt = _resolve_gate(fn)
+    mode = ("none" if gate_fn is None
+            else _resolve_gate_mode(save_gate, fn, gate_dt, block_n))
+    m, d = x2.shape
+    n = w.shape[1]
+    xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
+    wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+    out = _fwd_pallas(
+        xp, wp, f=f, gate_fn=gate_fn, gate_mode=mode, gate_dt=gate_dt,
+        xbar=crossbar_size, bm=block_m, bn=block_n, interpret=interpret,
+    )
+    if mode in ("packed", "bytes"):
+        y, gate = out
+        return y[:m, :n], gate
+    return out[:m, :n], None
+
+
 @functools.lru_cache(maxsize=None)
 def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
-                    interpret: bool):
+                    interpret: bool, save_gate: str = "auto"):
     """custom_vjp op over unpadded 2-D (x, w), statics baked in (cached so
     repeated traces under jit reuse one op identity). A fn registered
     without a derivative still runs forward-only (no VJP attached)."""
     f, gate_fn, gate_dt = _resolve_gate(fn)
 
-    def _run(x2, w, with_gate):
+    def _run(x2, w, gate_mode):
         m, d = x2.shape
         n = w.shape[1]
         xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
         wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
         out = _fwd_pallas(
-            xp, wp, f=f, gate_fn=gate_fn,
-            gate_dt=gate_dt if with_gate else None,
-            xbar=crossbar_size, bm=block_m, bn=block_n, interpret=interpret,
+            xp, wp, f=f, gate_fn=gate_fn, gate_mode=gate_mode,
+            gate_dt=gate_dt, xbar=crossbar_size, bm=block_m, bn=block_n,
+            interpret=interpret,
         )
-        if with_gate:
+        if gate_mode in ("packed", "bytes"):
             y, gate = out
-            return y[:m, :n], gate[:, :m, :n]
+            # Packed word columns cover the padded N and cannot be cropped
+            # bit-wise; padded columns carry zero bits (zero w columns).
+            gate = gate[:, :m, :] if gate_mode == "packed" else gate[:, :m, :n]
+            return y[:m, :n], gate
         return out[:m, :n], None
 
     if gate_fn is None:
-        return lambda x2, w: _run(x2, w, with_gate=False)[0]
+        return lambda x2, w: _run(x2, w, "none")[0]
+
+    gate_mode = _resolve_gate_mode(save_gate, fn, gate_dt, block_n)
 
     @jax.custom_vjp
     def op(x2, w):
-        return _run(x2, w, with_gate=False)[0]
+        return _run(x2, w, "none")[0]
 
     def op_fwd(x2, w):
-        y, gate = _run(x2, w, with_gate=gate_dt is not None)
+        y, gate = _run(x2, w, gate_mode)
         return y, (x2, w, gate)
 
     def op_bwd(res, g):
@@ -405,6 +665,8 @@ def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
         dx, dw = _segmented_bwd(
             g, x2, w, gate, crossbar_size=crossbar_size,
             block_m=block_m, block_n=block_n, interpret=interpret,
+            gate_fn=gate_fn if gate_mode == "recompute" else None,
+            gate_packed=gate_mode == "packed",
         )
         return dx.astype(x2.dtype), dw.astype(w.dtype)
 
@@ -414,7 +676,7 @@ def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
 
 @functools.lru_cache(maxsize=None)
 def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
-                       interpret: bool):
+                       interpret: bool, save_gate: str = "auto"):
     """Straight-through custom_vjp over (x_q, w_codes, scale).
 
     Cotangents for the integer codes are computed as-if-fp32 (STE) and only
@@ -425,32 +687,34 @@ def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
     """
     f, gate_fn, gate_dt = _resolve_gate(fn)
 
-    def _run(x2, w, scale, with_gate):
+    def _run(x2, w, scale, gate_mode):
         m, d = x2.shape
         n = w.shape[1]
         xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
         wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
         scale2 = scale.reshape(1, 1).astype(jnp.float32)
         out = _fwd_pallas(
-            xp, wp, f=f, gate_fn=gate_fn,
-            gate_dt=gate_dt if with_gate else None,
-            xbar=crossbar_size, bm=block_m, bn=block_n, interpret=interpret,
-            scale2=scale2,
+            xp, wp, f=f, gate_fn=gate_fn, gate_mode=gate_mode,
+            gate_dt=gate_dt, xbar=crossbar_size, bm=block_m, bn=block_n,
+            interpret=interpret, scale2=scale2,
         )
-        if with_gate:
+        if gate_mode in ("packed", "bytes"):
             y, gate = out
-            return y[:m, :n], gate[:, :m, :n]
+            gate = gate[:, :m, :] if gate_mode == "packed" else gate[:, :m, :n]
+            return y[:m, :n], gate
         return out[:m, :n], None
 
     if gate_fn is None:
-        return lambda x2, w, scale: _run(x2, w, scale, with_gate=False)[0]
+        return lambda x2, w, scale: _run(x2, w, scale, "none")[0]
+
+    gate_mode = _resolve_gate_mode(save_gate, fn, gate_dt, block_n)
 
     @jax.custom_vjp
     def op(x2, w, scale):
-        return _run(x2, w, scale, with_gate=False)[0]
+        return _run(x2, w, scale, "none")[0]
 
     def op_fwd(x2, w, scale):
-        y, gate = _run(x2, w, scale, with_gate=gate_dt is not None)
+        y, gate = _run(x2, w, scale, gate_mode)
         return y, (x2, w, scale, gate)
 
     def op_bwd(res, g):
@@ -459,6 +723,9 @@ def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
         dxu, dwu = _segmented_bwd(
             g, x2, w, gate, crossbar_size=crossbar_size,
             block_m=block_m, block_n=block_n, interpret=interpret,
+            gate_fn=gate_fn if gate_mode == "recompute" else None,
+            scale=s32 if gate_mode == "recompute" else None,
+            gate_packed=gate_mode == "packed",
         )
         # y = sum_s f(scale * p_s): chain rule adds one scale factor to
         # dx/dw, and d(scale) telescopes to <dw_unscaled, w>.
@@ -479,7 +746,8 @@ def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret"),
+    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret",
+                     "save_gate"),
 )
 def cadc_matmul_pallas(
     x: Array,
@@ -490,25 +758,30 @@ def cadc_matmul_pallas(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    save_gate: str = "auto",
 ) -> Array:
     """y[M,N] = sum_s f( x[:, s*xbar:(s+1)*xbar] @ w[s*xbar:(s+1)*xbar, :] ).
 
     x: [M, D] (or [..., D], flattened internally), w: [D, N]. Output fp32.
-    Differentiable: jax.grad flows through the saved-gate custom_vjp whose
-    backward is itself two segmented Pallas kernels (module docstring).
+    Differentiable: jax.grad flows through the custom_vjp whose backward is
+    itself two segmented Pallas kernels; `save_gate` picks the gradient
+    residual format — packed uint32 bitmask / byte gate / recompute-in-
+    backward (module docstring).
     """
     *lead, d = x.shape
     n = w.shape[1]
     if w.shape[0] != d:
         raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
-    op = _diff_matmul_op(crossbar_size, fn, block_m, block_n, interpret)
+    op = _diff_matmul_op(crossbar_size, fn, block_m, block_n, interpret,
+                         save_gate)
     y = op(x.reshape(-1, d), w)
     return y.reshape(*lead, n)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret"),
+    static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret",
+                     "save_gate"),
 )
 def cadc_matmul_q8_pallas(
     x_q: Array,
@@ -520,6 +793,7 @@ def cadc_matmul_q8_pallas(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    save_gate: str = "auto",
 ) -> Array:
     """Quantized CADC: x_q int8 [M, D], w_codes int8 {-1,0,1} [D, N],
     scale fp32 scalar (input_lsb * weight_alpha). Output fp32.
@@ -527,7 +801,8 @@ def cadc_matmul_q8_pallas(
     when they are float arrays (QAT); int primals get float0 cotangents."""
     *lead, d = x_q.shape
     n = w_codes.shape[1]
-    op = _diff_matmul_q8_op(crossbar_size, fn, block_m, block_n, interpret)
+    op = _diff_matmul_q8_op(crossbar_size, fn, block_m, block_n, interpret,
+                            save_gate)
     y = op(x_q.reshape(-1, d), w_codes, jnp.asarray(scale))
     return y.reshape(*lead, n)
 

@@ -8,14 +8,18 @@
   * "auto"       — pallas on TPU, xla otherwise
 
 Every impl is gradient-aware: the Pallas paths carry jax.custom_vjp rules
-(saved-gate backward kernels, see kernels/cadc_matmul.py) so `impl="auto"`
-is valid under jax.grad on every backend — training no longer needs to
-detour through the XLA einsum path, which now serves as the autodiff
-reference oracle for the fused kernels.
+(backward kernels, see kernels/cadc_matmul.py) so `impl="auto"` is valid
+under jax.grad on every backend — training no longer needs to detour
+through the XLA einsum path, which now serves as the autodiff reference
+oracle for the fused kernels.
+
+`save_gate` selects the gradient-residual format of the Pallas paths
+("auto" | "packed" | "bytes" | "recompute" — see kernels/cadc_matmul.py);
+the XLA path ignores it (XLA autodiff rematerializes its own residuals).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +45,7 @@ def cadc_matmul(
     impl: str = "auto",
     block_m: int = 256,
     block_n: int = 256,
+    save_gate: str = "auto",
 ) -> Array:
     """y = sum_s f(x_s @ w_s). Output in x.dtype (xla) / fp32 (pallas)."""
     mode = _resolve(impl)
@@ -54,6 +59,7 @@ def cadc_matmul(
         block_m=block_m,
         block_n=block_n,
         interpret=(mode == "interpret"),
+        save_gate=save_gate,
     ).astype(x.dtype)
 
 
@@ -67,6 +73,7 @@ def cadc_matmul_q8(
     impl: str = "auto",
     block_m: int = 256,
     block_n: int = 256,
+    save_gate: str = "auto",
 ) -> Array:
     mode = _resolve(impl)
     if mode == "xla":
@@ -84,7 +91,26 @@ def cadc_matmul_q8(
         block_m=block_m,
         block_n=block_n,
         interpret=(mode == "interpret"),
+        save_gate=save_gate,
     )
+
+
+def _conv_fmap_vmem_bytes(
+    x_shape: Tuple[int, ...],
+    w_shape: Tuple[int, ...],
+    padding,
+    itemsize: int = 4,
+) -> int:
+    """VMEM bytes of ONE padded feature map held resident by the fused conv
+    kernel — computed from the REAL normalized padding (a "SAME" 1x1 conv
+    pads nothing; "VALID" never pads), not the worst-case (k-1) halo the
+    old estimate assumed."""
+    from repro.core.conv import _norm_padding
+
+    _, h, w, cin = x_shape
+    k1, k2 = w_shape[0], w_shape[1]
+    (pt, pb), (pl_, pr) = _norm_padding(padding, (k1, k2), (1, 1))
+    return (h + pt + pb) * (w + pl_ + pr) * cin * itemsize
 
 
 def cadc_conv2d(
@@ -99,27 +125,72 @@ def cadc_conv2d(
     block_h: int = 8,
     block_n: int = 128,
     vmem_budget_bytes: int = 8 * 2**20,
+    save_gate: str = "auto",
 ) -> Array:
     """Fused im2col + segmented conv (psums and patches never hit HBM).
 
     Falls back to the XLA im2col path when the padded feature map would not
-    fit the kernel's VMEM budget or dilation is needed.
+    fit the kernel's VMEM budget, the batch is empty (a zero-size Pallas
+    grid is not a meaningful launch), or dilation is needed.
     """
     from repro.core import conv as _conv
-    from repro.kernels import cadc_conv as _ck
 
     mode = _resolve(impl)
-    fmap_bytes = int(
-        x.shape[0] and (x.shape[1] + w.shape[0]) * (x.shape[2] + w.shape[1])
-        * x.shape[3] * 4
+    fmap_bytes = _conv_fmap_vmem_bytes(
+        x.shape, w.shape, padding, jnp.dtype(x.dtype).itemsize
     )
-    if mode == "xla" or fmap_bytes > vmem_budget_bytes:
+    if mode == "xla" or x.shape[0] == 0 or fmap_bytes > vmem_budget_bytes:
         return _conv.cadc_conv2d(
             x, w, crossbar_size=crossbar_size, fn=fn, stride=stride,
             padding=padding,
         )
+    from repro.kernels import cadc_conv as _ck
+
     return _ck.cadc_conv2d_pallas(
         x, w, crossbar_size=crossbar_size, fn=fn, stride=tuple(stride),
         padding=padding, block_h=block_h, block_n=block_n,
-        interpret=(mode == "interpret"),
+        interpret=(mode == "interpret"), save_gate=save_gate,
     ).astype(x.dtype)
+
+
+def cadc_conv2d_q8(
+    x_q: Array,
+    w_codes: Array,
+    scale: Array,
+    *,
+    crossbar_size: int = 256,
+    fn: str = "relu",
+    stride=(1, 1),
+    padding="SAME",
+    impl: str = "auto",
+    block_h: int = 8,
+    block_n: int = 128,
+    vmem_budget_bytes: int = 8 * 2**20,
+    save_gate: str = "auto",
+) -> Array:
+    """Quantized fused conv (int8 taps -> int32 psums -> dequant -> f()).
+
+    The XLA path IS the sequential q8 oracle (ref.cadc_conv2d_q8_ref), so
+    "interpret"/"pallas" vs "xla" agree bit-exactly — the dispatch is
+    numerics-transparent. Same VMEM fallback rules as cadc_conv2d (the
+    int8 fmap is 4x denser, so the fused path engages at 4x the spatial
+    size)."""
+    from repro.kernels import ref
+
+    mode = _resolve(impl)
+    fmap_bytes = _conv_fmap_vmem_bytes(
+        x_q.shape, w_codes.shape, padding, jnp.dtype(x_q.dtype).itemsize
+    )
+    if mode == "xla" or x_q.shape[0] == 0 or fmap_bytes > vmem_budget_bytes:
+        return ref.cadc_conv2d_q8_ref(
+            x_q, w_codes, scale, crossbar_size=crossbar_size, fn=fn,
+            stride=stride, padding=padding,
+        )
+    from repro.kernels import cadc_conv as _ck
+
+    return _ck.cadc_conv2d_q8_pallas(
+        x_q, w_codes, scale, crossbar_size=crossbar_size, fn=fn,
+        stride=tuple(stride), padding=padding, block_h=block_h,
+        block_n=block_n, interpret=(mode == "interpret"),
+        save_gate=save_gate,
+    )

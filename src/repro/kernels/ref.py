@@ -54,3 +54,29 @@ def cadc_matmul_q8_ref(
                          preferred_element_type=jnp.int32)
     psums = psums_i.astype(jnp.float32) * scale.astype(jnp.float32)
     return _seq_sum(f(psums))
+
+
+def cadc_conv2d_q8_ref(
+    x_q: Array,
+    w_codes: Array,
+    scale: Array,
+    *,
+    crossbar_size: int,
+    fn: str,
+    stride=(1, 1),
+    padding="SAME",
+) -> Array:
+    """Oracle for the fused q8 conv: im2col patches (exact integers) ->
+    per-segment int32 psums -> rescale -> f -> SEQUENTIAL segment sum.
+    x_q int8 [B,H,W,Cin], w_codes int8 [K1,K2,Cin,Cout] -> fp32
+    [B,OH,OW,Cout]. Integer psums have one true answer, so the fused
+    kernel must match this bit-exactly."""
+    from repro.core.conv import im2col
+
+    k1, k2, cin, cout = w_codes.shape
+    patches = im2col(x_q.astype(jnp.int32), (k1, k2), stride=tuple(stride),
+                     padding=padding)
+    return cadc_matmul_q8_ref(
+        patches, w_codes.reshape(k1 * k2 * cin, cout), scale,
+        crossbar_size=crossbar_size, fn=fn,
+    )

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import adc as adc_lib
 from repro.core import cadc as cadc_lib
 from repro.core import conv as conv_lib
+from repro.core import quant as quant_lib
 from repro.core.quant import FP32, QuantConfig
 
 Array = jnp.ndarray
@@ -41,6 +42,20 @@ class LayerMode:
     # requested (those need materialized psums, which the fused kernel
     # never writes out).
     kernel: str = "xla"
+    # Gradient-residual format of the fused kernels: 'auto' (bit-packed
+    # uint32 gate bitmask for indicator fns, byte gate otherwise) |
+    # 'packed' | 'bytes' | 'recompute' (no residual — the backward
+    # re-derives the gate on the MXU). See kernels/cadc_matmul.py.
+    save_gate: str = "auto"
+    # Route ternary-weight quantized layers through the int8-native fused
+    # kernels (cadc_matmul_q8 / cadc_conv2d_q8): int8 codes x int8 ternary
+    # codes -> int32 psums, bit-exact vs the q8 oracle. INFERENCE path —
+    # the whole layer computation sits under stop_gradient (int primals
+    # would get float0 anyway; the scale partials alone would be a
+    # spurious "gradient"), so jax.grad through a q8_fused layer is
+    # exactly zero. Training keeps the fake-quant STE floats
+    # (q8_fused=False).
+    q8_fused: bool = False
 
     def dendritic_fn(self) -> str:
         return self.fn if self.impl == "cadc" else "identity"
@@ -117,18 +132,44 @@ def _use_fused(mode: LayerMode, want_ps: bool) -> bool:
     return mode.kernel != "xla" and not want_ps and mode.adc is None
 
 
+def _use_q8(mode: LayerMode) -> bool:
+    """Int8-native fused path: opted in, quantization on, ternary weights
+    and int8-representable inputs (the paper's 4/2/4b operating point)."""
+    return (mode.q8_fused and mode.quant.enabled
+            and mode.quant.weight_bits == 2 and mode.quant.input_bits <= 8)
+
+
 def linear_forward(p: Params, x: Array, ctx: Ctx, *, name: str = "fc") -> Array:
     from repro.kernels import ops as kops
 
     mode = ctx.mode
+    segs = cadc_lib.num_segments(p["w"].shape[0], mode.crossbar_size)
+    want_ps = mode.collect_stats and segs > 1
+    if _use_q8(mode) and not want_ps and mode.adc is None:
+        # Int8-native crossbar arithmetic (alpha * codes == ternarize(w)):
+        # one shared fp32 scale, int32 psums, bit-exact vs the q8 oracle
+        # on every impl (the xla dispatch IS the oracle). stop_gradient:
+        # inference-only path — without it jax.grad would deliver a
+        # spurious scale-direction-only "gradient" (int codes are float0).
+        x_codes, lsb = quant_lib.quantize_codes(
+            jax.lax.stop_gradient(x), mode.quant.input_bits)
+        w_codes, alpha = quant_lib.ternary_decompose(
+            jax.lax.stop_gradient(p["w"]))
+        y = kops.cadc_matmul_q8(
+            x_codes, w_codes, jax.lax.stop_gradient(lsb * alpha),
+            crossbar_size=mode.crossbar_size,
+            fn=mode.dendritic_fn(), impl=mode.kernel,
+            save_gate=mode.save_gate,
+        ).astype(x.dtype)
+        if "b" in p:
+            y = y + p["b"]
+        return y
     w = mode.quant.quant_weight(p["w"])
     xq = mode.quant.quant_input(x)
-    segs = cadc_lib.num_segments(w.shape[0], mode.crossbar_size)
-    want_ps = mode.collect_stats and segs > 1
     if _use_fused(mode, want_ps):
         y = kops.cadc_matmul(
             xq, w, crossbar_size=mode.crossbar_size, fn=mode.dendritic_fn(),
-            impl=mode.kernel,
+            impl=mode.kernel, save_gate=mode.save_gate,
         )
         if "b" in p:
             y = y + p["b"]
@@ -163,15 +204,28 @@ def conv_forward(
     from repro.kernels import ops as kops
 
     mode = ctx.mode
-    w = mode.quant.quant_weight(p["w"])
-    xq = mode.quant.quant_input(x)
-    k1, k2, cin, _ = w.shape
+    k1, k2, cin, _ = p["w"].shape
     segs = cadc_lib.num_segments(k1 * k2 * cin, mode.crossbar_size)
     want_ps = mode.collect_stats and segs > 1
+    if _use_q8(mode) and not want_ps and mode.adc is None:
+        # Inference-only int8 path — stop_gradient as in linear_forward.
+        x_codes, lsb = quant_lib.quantize_codes(
+            jax.lax.stop_gradient(x), mode.quant.input_bits)
+        w_codes, alpha = quant_lib.ternary_decompose(
+            jax.lax.stop_gradient(p["w"]))
+        return kops.cadc_conv2d_q8(
+            x_codes, w_codes, jax.lax.stop_gradient(lsb * alpha),
+            crossbar_size=mode.crossbar_size,
+            fn=mode.dendritic_fn(), stride=stride, padding=padding,
+            impl=mode.kernel, save_gate=mode.save_gate,
+        ).astype(x.dtype)
+    w = mode.quant.quant_weight(p["w"])
+    xq = mode.quant.quant_input(x)
     if _use_fused(mode, want_ps):
         return kops.cadc_conv2d(
             xq, w, crossbar_size=mode.crossbar_size, fn=mode.dendritic_fn(),
             stride=stride, padding=padding, impl=mode.kernel,
+            save_gate=mode.save_gate,
         )
     out = conv_lib.cadc_conv2d(
         xq,

@@ -75,7 +75,7 @@ def linear_apply(p: Params, x: Array, cfg: ArchConfig) -> Array:
                 xp.astype(cdtype(cfg)),
                 w.reshape(s * xbar, d_out).astype(cdtype(cfg)),
                 crossbar_size=xbar, fn=cfg.dendritic_fn,
-                impl=cfg.kernel_impl,
+                impl=cfg.kernel_impl, save_gate=cfg.kernel_save_gate,
             ).astype(cdtype(cfg))
             if "b" in p:
                 y = y + p["b"].astype(y.dtype)

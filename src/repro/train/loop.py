@@ -38,6 +38,12 @@ class TrainConfig:
     # kernels' custom_vjp (gradient parity with 'xla' — tests/
     # test_kernel_grads.py).
     kernel: Optional[str] = None
+    # Gradient-residual override for the fused kernels: None keeps the
+    # LayerMode's setting; 'auto' | 'packed' | 'bytes' | 'recompute'
+    # force it ('recompute' trades one extra MXU matmul per backward
+    # block for ZERO residual HBM — the right call for inference-heavy
+    # fine-tuning; see kernels/cadc_matmul.py).
+    save_gate: Optional[str] = None
 
 
 def cross_entropy(logits: Array, labels: Array) -> Array:
@@ -106,10 +112,15 @@ def train(
     """Returns {'params', 'state', 'history', 'eval'} — restartable via
     cfg.ckpt_dir (picks up the latest complete checkpoint)."""
     optimizer = optimizer or opt_lib.adamw(1e-3)
+    overrides = {}
     if cfg.kernel is not None:
-        mode = dataclasses.replace(mode, kernel=cfg.kernel)
+        overrides["kernel"] = cfg.kernel
+    if cfg.save_gate is not None:
+        overrides["save_gate"] = cfg.save_gate
+    if overrides:
+        mode = dataclasses.replace(mode, **overrides)
         if eval_mode is not None:
-            eval_mode = dataclasses.replace(eval_mode, kernel=cfg.kernel)
+            eval_mode = dataclasses.replace(eval_mode, **overrides)
     key = jax.random.PRNGKey(cfg.seed)
     params, model_state = init_fn(key, **(init_kwargs or {}))
     opt_state = optimizer.init(params)

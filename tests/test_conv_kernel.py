@@ -84,6 +84,109 @@ def test_ops_wrapper_fallback():
                                rtol=1e-4, atol=1e-4)
 
 
+class TestSegmentTapsEdgeCases:
+    """Fused kernel vs the segmented matmul oracle over im2col patches —
+    the exact reduction the conv is defined as — at the segmentation
+    table's corner cases."""
+
+    @staticmethod
+    def _fused_vs_im2col_oracle(b, h, w_, cin, cout, k, xbar, *,
+                                stride=(1, 1), padding="SAME"):
+        from repro.core.conv import im2col
+        from repro.kernels.ref import cadc_matmul_ref
+
+        x, wt = _mk(b, h, w_, cin, cout, k)
+        out = cadc_conv2d_pallas(x, wt, crossbar_size=xbar, fn="relu",
+                                 stride=stride, padding=padding,
+                                 interpret=True)
+        patches = im2col(x, (k, k), stride=stride, padding=padding)
+        want = cadc_matmul_ref(patches, wt.reshape(k * k * cin, cout),
+                               crossbar_size=xbar, fn="relu")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_crossbar_smaller_than_cin(self):
+        """xbar < Cin: several segments live INSIDE one spatial tap."""
+        self._fused_vs_im2col_oracle(2, 8, 8, 48, 16, 3, xbar=16)
+
+    def test_crossbar_not_dividing_d(self):
+        """D = 3*3*20 = 180, xbar = 64: ragged last segment (180 = 2*64
+        + 52) with tap-spanning interior segments."""
+        self._fused_vs_im2col_oracle(2, 9, 9, 20, 12, 3, xbar=64)
+
+    def test_stride2_valid_padding(self):
+        """(2,2) stride under VALID padding — the in-register stride
+        slicing composes with the unpadded row offsets."""
+        self._fused_vs_im2col_oracle(1, 11, 11, 24, 8, 3, xbar=32,
+                                     stride=(2, 2), padding="VALID")
+
+    def test_stride2_valid_ragged_all_at_once(self):
+        """Every edge at once: xbar < Cin, non-dividing D, stride 2,
+        VALID."""
+        self._fused_vs_im2col_oracle(2, 10, 10, 40, 8, 3, xbar=48,
+                                     stride=(2, 2), padding="VALID")
+
+
+class TestConvVmemBudget:
+    """ops.cadc_conv2d's fused-vs-fallback routing (the VMEM estimate must
+    follow the REAL padding, and empty batches must not launch Pallas)."""
+
+    def test_estimate_uses_real_padding(self):
+        from repro.kernels.ops import _conv_fmap_vmem_bytes
+
+        x_shape, w_shape = (2, 16, 16, 8), (3, 3, 8, 4)
+        same = _conv_fmap_vmem_bytes(x_shape, w_shape, "SAME")
+        valid = _conv_fmap_vmem_bytes(x_shape, w_shape, "VALID")
+        explicit = _conv_fmap_vmem_bytes(x_shape, w_shape, ((2, 2), (0, 0)))
+        assert same == 18 * 18 * 8 * 4
+        assert valid == 16 * 16 * 8 * 4  # no halo — old formula said 19*19
+        assert explicit == 20 * 16 * 8 * 4
+        # itemsize scales (int8 fmaps are 4x denser)
+        assert _conv_fmap_vmem_bytes(x_shape, w_shape, "VALID", 1) == valid // 4
+
+    def test_1x1_same_pads_nothing(self):
+        from repro.kernels.ops import _conv_fmap_vmem_bytes
+
+        assert _conv_fmap_vmem_bytes((1, 8, 8, 16), (1, 1, 16, 4), "SAME") \
+            == 8 * 8 * 16 * 4
+
+    def test_fallback_boundary(self, monkeypatch):
+        """Just-at-budget runs fused; one byte under falls back to XLA."""
+        import repro.kernels.cadc_conv as ck
+        from repro.kernels.ops import _conv_fmap_vmem_bytes
+
+        x, wt = _mk(1, 8, 8, 8, 8, 3)
+        need = _conv_fmap_vmem_bytes(x.shape, wt.shape, "SAME")
+        calls = []
+        real = ck.cadc_conv2d_pallas
+        monkeypatch.setattr(
+            ck, "cadc_conv2d_pallas",
+            lambda *a, **k: calls.append(1) or real(*a, **k))
+        y_fused = ops.cadc_conv2d(x, wt, crossbar_size=32, impl="interpret",
+                                  vmem_budget_bytes=need)
+        assert calls == [1]
+        y_fallback = ops.cadc_conv2d(x, wt, crossbar_size=32,
+                                     impl="interpret",
+                                     vmem_budget_bytes=need - 1)
+        assert calls == [1]  # not called again -> xla path
+        np.testing.assert_allclose(np.asarray(y_fused),
+                                   np.asarray(y_fallback),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_empty_batch_falls_back(self, monkeypatch):
+        """B = 0 must not reach the Pallas launch (zero-size grid) and
+        still return the right shape."""
+        import repro.kernels.cadc_conv as ck
+
+        x, wt = _mk(1, 8, 8, 8, 8, 3)
+        x0 = x[:0]
+        monkeypatch.setattr(
+            ck, "cadc_conv2d_pallas",
+            lambda *a, **k: pytest.fail("pallas launched for empty batch"))
+        y = ops.cadc_conv2d(x0, wt, crossbar_size=32, impl="interpret")
+        assert y.shape == (0, 8, 8, 8)
+
+
 class TestSegmentTaps:
     """The static segmentation table is the kernel's correctness core."""
 

@@ -132,6 +132,155 @@ class TestConvGrads:
         assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
 
 
+class TestSaveGateModes:
+    """The three gradient-residual formats must be numerically
+    interchangeable: packed uint32 bitmask == byte gate == recompute-in-
+    backward, all within TOL of the XLA oracle."""
+
+    @pytest.mark.parametrize("xbar", XBARS)
+    @pytest.mark.parametrize("save_gate", ["packed", "bytes", "recompute"])
+    def test_matmul_parity(self, xbar, save_gate):
+        m, d, n = 10, 2 * xbar + 17, 40
+        x = jax.random.normal(jax.random.fold_in(KEY, d + 3), (m, d))
+        w = jax.random.normal(jax.random.fold_in(KEY, d + 4), (d, n)) / 16
+
+        def pallas_op(a, b):
+            # block 32 keeps block_n % 32 == 0 so "packed" is real packing
+            return cadc_matmul_pallas(a, b, crossbar_size=xbar, fn="relu",
+                                      block_m=32, block_n=32, interpret=True,
+                                      save_gate=save_gate)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(
+            lambda a, b: core_cadc.cadc_matmul(a, b, crossbar_size=xbar,
+                                               fn="relu"), x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    @pytest.mark.parametrize("save_gate", ["bytes", "recompute"])
+    def test_curved_fn_modes(self, save_gate):
+        """fp32 gates can't pack, but bytes/recompute must both work."""
+        x = jax.random.normal(jax.random.fold_in(KEY, 81), (12, 150))
+        w = jax.random.normal(jax.random.fold_in(KEY, 82), (150, 18)) / 12
+
+        def pallas_op(a, b):
+            return cadc_matmul_pallas(a, b, crossbar_size=64, fn="tanh",
+                                      block_m=32, block_n=32, interpret=True,
+                                      save_gate=save_gate)
+
+        gx, gw = _grads(pallas_op, x, w)
+        hx, hw = _grads(
+            lambda a, b: core_cadc.cadc_matmul(a, b, crossbar_size=64,
+                                               fn="tanh"), x, w)
+        assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+        assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    def test_packed_residual_is_8x_smaller(self):
+        """The acceptance quantity: uint32 bitmask vs byte-bool residual
+        bytes for the same forward = exactly 8x, and recompute saves
+        nothing."""
+        from repro.kernels.cadc_matmul import (cadc_matmul_fwd_residuals,
+                                               gate_residual_nbytes)
+
+        m, d, n, xbar = 64, 256, 64, 64
+        x = jax.random.normal(jax.random.fold_in(KEY, 91), (m, d))
+        w = jax.random.normal(jax.random.fold_in(KEY, 92), (d, n)) / 16
+        sizes = {}
+        for sg in ["packed", "bytes", "recompute"]:
+            _, gate = cadc_matmul_fwd_residuals(
+                x, w, crossbar_size=xbar, fn="relu", block_m=32, block_n=32,
+                save_gate=sg)
+            sizes[sg] = 0 if gate is None else gate.size * gate.dtype.itemsize
+            assert sizes[sg] == gate_residual_nbytes(
+                m, d, n, crossbar_size=xbar, fn="relu", block_m=32,
+                block_n=32, save_gate=sg)
+        assert sizes["bytes"] == 8 * sizes["packed"]
+        assert sizes["recompute"] == 0
+
+    def test_packed_rejects_curved_fn(self):
+        with pytest.raises(ValueError, match="packed"):
+            cadc_matmul_pallas(
+                jnp.ones((8, 64)), jnp.ones((64, 8)), crossbar_size=32,
+                fn="tanh", block_m=8, block_n=32, interpret=True,
+                save_gate="packed")
+
+    def test_packed_rejects_unaligned_block_n(self):
+        with pytest.raises(ValueError, match="block_n"):
+            cadc_matmul_pallas(
+                jnp.ones((8, 64)), jnp.ones((64, 8)), crossbar_size=32,
+                fn="relu", block_m=8, block_n=8, interpret=True,
+                save_gate="packed")
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="save_gate"):
+            cadc_matmul_pallas(
+                jnp.ones((8, 64)), jnp.ones((64, 8)), crossbar_size=32,
+                fn="relu", block_m=8, block_n=32, interpret=True,
+                save_gate="zstd")
+
+    def test_conv_save_gate_modes(self):
+        """Conv VJP honors the knob end-to-end (packed needs cout block
+        aligned to 32 — cout=32 here)."""
+        x = jax.random.normal(jax.random.fold_in(KEY, 95), (1, 8, 8, 12))
+        w = jax.random.normal(jax.random.fold_in(KEY, 96),
+                              (3, 3, 12, 32)) * 0.1
+        hx, hw = _grads(
+            lambda a, b: core_conv.cadc_conv2d(a, b, crossbar_size=32,
+                                               fn="relu"), x, w)
+        for sg in ["packed", "bytes", "recompute"]:
+            gx, gw = _grads(
+                lambda a, b: cadc_conv2d_pallas(
+                    a, b, crossbar_size=32, fn="relu", block_n=32,
+                    interpret=True, save_gate=sg), x, w)
+            assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+            assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+
+    def test_conv_packed_rejects_unaligned_cout_block(self):
+        """Explicit 'packed' on a conv whose effective Cout block
+        (min(block_n, cout)) is not word-aligned fails LOUDLY on the
+        forward call — no silent downgrade to bytes."""
+        x = jnp.ones((1, 6, 6, 8))
+        w = jnp.ones((3, 3, 8, 40)) * 0.1  # bn = min(128, 40) = 40
+        with pytest.raises(ValueError, match="packed"):
+            cadc_conv2d_pallas(x, w, crossbar_size=32, fn="relu",
+                               interpret=True, save_gate="packed")
+
+    def test_registered_indicator_fn_can_opt_into_packing(self):
+        """gate_packing=True at register() time turns on bitmask residuals
+        for a custom indicator-derivative fn."""
+        name = "_test_packable"
+        dendritic.register(
+            name,
+            lambda p: jnp.where(p > 1.0, p - 1.0, 0.0),
+            lambda p: (p > 1.0).astype(p.dtype),
+            gate=jnp.bool_, gate_packing=True,
+        )
+        try:
+            assert dendritic.gate_packing(name)
+            x = jax.random.normal(jax.random.fold_in(KEY, 97), (8, 100))
+            w = jax.random.normal(jax.random.fold_in(KEY, 98), (100, 12)) / 8
+
+            def pallas_op(a, b):
+                return cadc_matmul_pallas(a, b, crossbar_size=32, fn=name,
+                                          block_m=8, block_n=32,
+                                          interpret=True, save_gate="packed")
+
+            def xla_op(a, b):
+                return core_cadc.cadc_matmul(
+                    a, b, crossbar_size=32,
+                    fn=lambda p: jnp.where(p > 1.0, p - 1.0, 0.0))
+
+            gx, gw = _grads(pallas_op, x, w)
+            hx, hw = _grads(xla_op, x, w)
+            assert float(jnp.max(jnp.abs(gx - hx))) <= TOL
+            assert float(jnp.max(jnp.abs(gw - hw))) <= TOL
+        finally:
+            dendritic.DENDRITIC_FNS.pop(name, None)
+            dendritic.DENDRITIC_GRADS.pop(name, None)
+            dendritic.GATE_DTYPES.pop(name, None)
+            dendritic.GATE_PACKING.pop(name, None)
+
+
 class TestQ8Grads:
     def test_scale_grad_int_inputs(self):
         """d/d(scale) flows even with genuinely-int8 codes (the int primals
