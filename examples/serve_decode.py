@@ -1,21 +1,25 @@
-"""Batched serving example: decode with per-request KV caches.
+"""Continuous-batching serving example over the CADC decode path.
 
     PYTHONPATH=src python examples/serve_decode.py
 
-Serves a smoke-size gemma3 (5:1 local:global attention, MQA) with a batch
-of 8 concurrent requests, once with dense matmuls and once with CADC
-enabled, and prints throughput for both — the serving-side integration of
-the paper's technique.
+Serves a smoke-size gemma3 (5:1 local:global attention, MQA) through the
+repro.serve engine: 8 synthetic Poisson requests over 4 slots, so the run
+exercises admission queueing, finished-sequence eviction and slot/paged-
+block reuse — once with dense matmuls and once with CADC linears (plus
+live psum-sparsity telemetry), printing throughput for both. This is the
+serving-side integration of the paper's technique; see
+tests/test_serve_engine.py for the paged-vs-dense bit-parity guarantee.
 """
 from repro.launch import serve as serve_driver
 
 
 def main():
     for cadc in (False, True):
-        args = ["--arch", "gemma3_1b", "--smoke", "--batch", "8",
-                "--prompt-len", "16", "--gen", "32"]
+        args = ["--arch", "gemma3_1b", "--smoke", "--slots", "4",
+                "--requests", "8", "--rate", "0.5",
+                "--prompt-len", "16", "--gen", "16"]
         if cadc:
-            args.append("--cadc")
+            args += ["--cadc", "--telemetry-every", "4"]
         serve_driver.main(args)
 
 

@@ -123,6 +123,14 @@ class ArchConfig:
     # per-shape overrides (e.g. microbatching)
     n_microbatches: int = 8
 
+    # ---- serving defaults (repro.serve continuous-batching engine) ----
+    # slot count of the continuous-batching engine (concurrent sequences
+    # resident in the caches) and the paged-KV block granule. block size
+    # must divide both max_len and the local ring (min(local_window,
+    # max_len)); 16 divides every assigned arch's window.
+    serve_slots: int = 8
+    serve_block_size: int = 16
+
     # embedding/head rows padded to this multiple (TP/lane alignment —
     # Megatron-style vocab padding; logits are sliced back to vocab_size)
     vocab_pad_multiple: int = 256

@@ -1,28 +1,35 @@
-"""Batched decode serving driver.
+"""Continuous-batching serving driver — thin CLI over repro.serve.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3_1b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --slots 4 --requests 12 --rate 0.5 --prompt-len 16 --gen 16
 
-Continuous-batching-style loop over the SAME serve_step the dry-run
-compiles: prefill once, then one fused decode step per token across the
-whole batch, KV/recurrent caches donated in-place. On a pod the caches are
-sharded (batch over data, kv-heads over model) by the same rules the
-dry-run exercises at 32k/500k context.
+Requests arrive as a Poisson-style synthetic stream (more requests than
+slots => the engine exercises admission queueing, finished-sequence
+eviction and slot/block reuse). Prefill is BATCHED by default (one
+full-sequence forward per admission wave, per-slot prompt lengths);
+--prefill-via-decode restores the legacy token-at-a-time path, which
+builds the caches through the decode step itself and thereby checks the
+cache-consistency invariant end to end. --backend picks the paged
+(block-table KV pools) or dense (per-slot rings) cache layout — the two
+are bit-identical on the decode path (tests/test_serve_engine.py).
+
+Multi-host note: the engine runs single-process today; the sharding rules
+for the paged pools exist (sharding.paged_cache_specs — kv-heads over
+'model') but are not yet applied on the serving path. Wiring them in is
+the 'multi-host engine' ROADMAP item.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.launch import steps as steps_lib
 from repro.launch.train import make_local_mesh
 from repro.models.lm import transformer as tf
-from repro.parallel import sharding as shard_lib
+from repro.serve import EngineConfig, ServeEngine, poisson_workload
 
 
 def main(argv=None):
@@ -30,10 +37,25 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--cadc", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", type=int, default=None,
+                    dest="slots", help="concurrent cache slots (default: "
+                    "cfg.serve_slots; --batch kept as the legacy alias)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total synthetic requests (default 2x slots — "
+                    "forces slot reuse)")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrivals per decode step")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--block-size", type=int, default=None)
+    ap.add_argument("--backend", choices=["paged", "dense"], default="paged")
+    ap.add_argument("--prefill-via-decode", action="store_true",
+                    help="token-at-a-time prefill through the decode step "
+                    "(cache-consistency invariant check)")
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help="sample per-layer CADC psum sparsity every N steps")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (smoke_config if args.smoke else get_config)(args.arch)
@@ -41,43 +63,50 @@ def main(argv=None):
         cfg = cfg.with_overrides(linear_impl="cadc")
     if not cfg.supports_decode():
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
+
+    slots = args.slots or cfg.serve_slots
+    block = args.block_size or cfg.serve_block_size
     max_len = args.max_len or (args.prompt_len + args.gen)
+    max_len = -(-max_len // block) * block  # round up to block granularity
+    n_requests = args.requests or 2 * slots
 
     mesh = make_local_mesh()
     params = tf.init(jax.random.PRNGKey(0), cfg)
-    caches = tf.init_caches(cfg, args.batch, max_len)
+    engine = ServeEngine(cfg, params, EngineConfig(
+        n_slots=slots,
+        max_len=max_len,
+        block_size=block,
+        backend=args.backend,
+        prefill_mode="decode" if args.prefill_via_decode else "batched",
+        telemetry_every=args.telemetry_every,
+    ))
+    workload = poisson_workload(
+        n_requests=n_requests, rate=args.rate, vocab_size=cfg.vocab_size,
+        prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
+        max_new=(max(1, args.gen // 2), args.gen), seed=args.seed)
 
-    serve_step = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(3,))
-
-    # prefill: feed prompt tokens one step at a time through the decode path
-    # (prefill_step exists for the batched-prefill path; this exercises the
-    # cache-consistency invariant end to end)
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size, jnp.int32)
     with mesh:
-        tok = prompt[:, 0]
-        for pos in range(args.prompt_len):
-            nxt, logits, caches = serve_step(
-                params, tok, jnp.asarray(pos, jnp.int32), caches)
-            tok = prompt[:, pos + 1] if pos + 1 < args.prompt_len else nxt
+        summary = engine.run(workload)
 
-        out = [np.asarray(tok)]
-        t0 = time.time()
-        for g in range(args.gen - 1):
-            pos = args.prompt_len + g
-            tok, logits, caches = serve_step(
-                params, tok, jnp.asarray(pos, jnp.int32), caches)
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        dt = time.time() - t0
-
-    toks = np.stack(out, 1)
-    tps = args.batch * (args.gen - 1) / max(dt, 1e-9)
-    print(f"arch={cfg.name} cadc={args.cadc} batch={args.batch} "
-          f"gen={args.gen}: {tps:.1f} tok/s ({dt*1e3/(args.gen-1):.1f} ms/step)")
-    print(f"sample continuation (req 0): {toks[0, :12].tolist()}")
-    return toks
+    print(f"arch={cfg.name} cadc={args.cadc} backend={args.backend} "
+          f"slots={slots} requests={n_requests} "
+          f"prefill={'decode' if args.prefill_via_decode else 'batched'}:")
+    print(f"  {summary['tokens_per_s']:.1f} tok/s over "
+          f"{summary['decode_tokens']} decode tokens "
+          f"({summary['requests_finished']} requests)")
+    print(f"  step ms p50/p99 = {summary['step_ms_p50']:.1f}/"
+          f"{summary['step_ms_p99']:.1f}  TTFT ms p50/p99 = "
+          f"{summary['ttft_ms_p50']:.1f}/{summary['ttft_ms_p99']:.1f}")
+    if "blocks" in summary:
+        print(f"  blocks: {json.dumps(summary['blocks'])}")
+    if "psum_sparsity" in summary:
+        gates = [v["gate_off"] for v in summary["psum_sparsity"].values()]
+        print(f"  psum gate-off fraction: mean={float(np.mean(gates)):.3f} "
+              f"over {len(gates)} tapped linears")
+    rid0 = min(engine.results)
+    print(f"sample continuation (req {rid0}): "
+          f"{engine.results[rid0].tokens[:12]}")
+    return summary
 
 
 if __name__ == "__main__":

@@ -163,7 +163,27 @@ def make_prefill_step(cfg: ArchConfig) -> Callable:
     return prefill_step
 
 
+def make_batched_prefill_step(cfg: ArchConfig) -> Callable:
+    """Serving prefill: full-sequence forward over left-aligned ragged
+    prompts. lengths [B] picks each slot's own last-token logits (per-slot
+    position offsets for the subsequent decode steps = lengths). Returns
+    (next_tokens [B], last_logits [B, V], cache contributions) — the
+    contributions feed the serve engine's cache writers (dense or paged)."""
+
+    def batched_prefill_step(params, batch, lengths):
+        logits, contribs = tf.forward_prefill(
+            cast_compute(params, cfg), batch, cfg, lengths=lengths)
+        idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        return jnp.argmax(last, -1).astype(jnp.int32), last, contribs
+
+    return batched_prefill_step
+
+
 def make_serve_step(cfg: ArchConfig) -> Callable:
+    """One fused decode step. `position` may be a scalar (legacy fixed
+    batch) or a [B] vector of per-slot offsets (continuous batching)."""
+
     def serve_step(params, tokens, position, caches):
         logits, caches = tf.decode_step(cast_compute(params, cfg), tokens,
                                         position, caches, cfg)

@@ -128,7 +128,11 @@ def conv_init(key, k1, k2, cin, cout, *, dtype=jnp.float32) -> Params:
 def _use_fused(mode: LayerMode, want_ps: bool) -> bool:
     """Route through the Pallas kernels? Only when nothing needs the
     materialized psums (stats sink / ADC transform) — the fused kernel
-    never writes them to HBM, which is the point."""
+    never writes them to HBM, which is the point. The `mode.adc is None`
+    guard is LOAD-BEARING: without it, mode.kernel would silently skip
+    the ADC noise model (psum_transform never reaches the fused path).
+    Contract pinned by tests/test_adc_kernel_fallback.py — kernel+adc
+    must be bit-identical to the xla reference with the same rng."""
     return mode.kernel != "xla" and not want_ps and mode.adc is None
 
 

@@ -2,6 +2,16 @@
 q-chunked blockwise softmax (bounded memory at 32k), KV-cache decode with
 rolling window for local layers.
 
+Decode supports PER-SLOT positions (`position` may be a scalar or a [B]
+vector) — the continuous-batching serve engine runs every cache slot at its
+own sequence offset. Two cache layouts share the same attention math:
+
+  * dense `KVCache` [B, L, K, hd] — one contiguous ring per slot;
+  * paged `PagedKV` — a pool of [n_blocks, block_size, K, hd] blocks plus a
+    per-slot block table; `attention_decode_paged` gathers a slot's blocks
+    back into the dense ring layout before the (identical) masked SDPA, so
+    paged decode is bit-identical to the dense path by construction.
+
 QKV/O projections route through layers.linear_apply, i.e. they are
 CADC-partitioned when the config says so. The QK^T and AV products are
 activation x activation — no weight crossbar — so CADC does not apply there
@@ -81,6 +91,24 @@ def attention_train(
     (causal sliding window). q is processed in cfg.attn_chunk chunks via
     lax.scan — bounded score memory at 32k.
     """
+    out, _, _ = _attention_full(p, x, cfg, kind=kind, positions=positions)
+    return out
+
+
+def attention_prefill(
+    p: Dict, x: Array, cfg: ArchConfig, *, kind: str, positions: Array
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """Batched-prefill attention: the full-sequence forward of
+    attention_train, additionally returning the rope'd (k, v)
+    [B, S, K, hd] so the serve engine can insert them into KV caches
+    (dense or paged) without re-running the projections."""
+    out, k, v = _attention_full(p, x, cfg, kind=kind, positions=positions)
+    return out, (k, v)
+
+
+def _attention_full(
+    p: Dict, x: Array, cfg: ArchConfig, *, kind: str, positions: Array
+) -> Tuple[Array, Array, Array]:
     b, s, d = x.shape
     q, k, v = _qkv(p, x, cfg, positions)
     chunk = min(cfg.attn_chunk, s)
@@ -132,7 +160,7 @@ def attention_train(
 
         out = jnp.moveaxis(_chunks(body), 0, 1).reshape(b, s, -1)
 
-    return ll.linear_apply(p["wo"], out, cfg)
+    return ll.linear_apply(p["wo"], out, cfg), k, v
 
 
 # ---------------------------------------------------------------------------
@@ -144,43 +172,123 @@ class KVCache(NamedTuple):
     v: Array
 
 
+class PagedKV(NamedTuple):
+    """Paged KV pool: a slot's logical [L, K, hd] ring is scattered over
+    `L / block_size` physical blocks named by its block-table row."""
+
+    k: Array  # [n_blocks, block_size, K, hd]
+    v: Array
+
+
+def cache_len(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    """Logical per-slot cache length for an attention layer kind. The
+    single source of the ring geometry — both the dense caches and the
+    paged block math derive from it (bit-parity depends on agreement)."""
+    return min(cfg.local_window, seq_len) if kind == "local" else seq_len
+
+
 def init_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int,
                dtype) -> KVCache:
-    l = min(cfg.local_window, seq_len) if kind == "local" else seq_len
+    l = cache_len(cfg, kind, seq_len)
     shape = (batch, l, cfg.n_kv_heads, cfg.head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_paged_pool(cfg: ArchConfig, n_blocks: int, block_size: int,
+                    dtype) -> PagedKV:
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return PagedKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _decode_qkv(p: Dict, x: Array, cfg: ArchConfig, position: Array):
+    """Shared one-token projections. position scalar or [B] -> pos [B]."""
+    b = x.shape[0]
+    h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ll.linear_apply(p["wq"], x, cfg).reshape(b, 1, h, hd)
+    k_new = ll.linear_apply(p["wk"], x, cfg).reshape(b, 1, k_, hd)
+    v_new = ll.linear_apply(p["wv"], x, cfg).reshape(b, 1, k_, hd)
+    pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
+    q = ll.rope(q, pos[:, None], cfg.rope_theta)
+    k_new = ll.rope(k_new, pos[:, None], cfg.rope_theta)
+    return q, k_new, v_new, pos
+
+
+def _ring_slot(pos: Array, l: int, kind: str) -> Array:
+    """Ring index each slot's new token lands at. Global caches clamp at
+    l-1 (mirrors the old dynamic_update_slice saturation at overflow)."""
+    return (pos % l) if kind == "local" else jnp.clip(pos, 0, l - 1)
+
+
+def _decode_mask(pos: Array, l: int, kind: str, window: int) -> Array:
+    """[B, L] validity of ring entries at per-slot positions `pos` [B]."""
+    idx = jnp.arange(l)[None, :]
+    p = pos[:, None]
+    if kind == "local":
+        # rolling buffer: entry i holds absolute position p_i with
+        # p_i ≡ i (mod l) and p_i <= pos; valid iff pos - p_i < window
+        abs_pos = p - ((p - idx) % l)
+        return (abs_pos >= 0) & (abs_pos <= p) & (abs_pos > p - window)
+    return idx <= p
 
 
 def attention_decode(
     p: Dict, x: Array, cfg: ArchConfig, *, kind: str, position: Array,
     cache: KVCache,
 ) -> Tuple[Array, KVCache]:
-    """One-token decode. x [B, 1, d]; position scalar int32 (current index).
-    Local layers use a rolling (mod-window) cache."""
+    """One-token decode. x [B, 1, d]; position int32 — a scalar (legacy
+    fixed-batch serving: every row at the same index) or a [B] vector
+    (continuous batching: per-slot offsets). Local layers use a rolling
+    (mod-window) cache."""
     b = x.shape[0]
-    h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ll.linear_apply(p["wq"], x, cfg).reshape(b, 1, h, hd)
-    k_new = ll.linear_apply(p["wk"], x, cfg).reshape(b, 1, k_, hd)
-    v_new = ll.linear_apply(p["wv"], x, cfg).reshape(b, 1, k_, hd)
-    pos = jnp.asarray(position, jnp.int32)
-    q = ll.rope(q, pos[None, None], cfg.rope_theta)
-    k_new = ll.rope(k_new, pos[None, None], cfg.rope_theta)
+    q, k_new, v_new, pos = _decode_qkv(p, x, cfg, position)
 
     l = cache.k.shape[1]
-    slot = (pos % l) if kind == "local" else pos  # kind is static
-    k_c = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
-                                              slot, axis=1)
-    v_c = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
-                                              slot, axis=1)
+    slot = _ring_slot(pos, l, kind)  # kind is static
+    rows = jnp.arange(b)
+    k_c = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v_c = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
 
-    idx = jnp.arange(l)
-    if kind == "local":
-        # rolling buffer: entry i holds absolute position p_i with
-        # p_i ≡ i (mod l) and p_i <= pos; valid iff pos - p_i < window
-        abs_pos = pos - ((pos - idx) % l)
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - cfg.local_window)
-    else:
-        valid = idx <= pos
-    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, l))
-    out = _sdpa(q, k_c, v_c, mask, cfg).reshape(b, 1, -1)
+    valid = _decode_mask(pos, l, kind, cfg.local_window)
+    out = _sdpa(q, k_c, v_c, valid[:, None, :], cfg).reshape(b, 1, -1)
     return ll.linear_apply(p["wo"], out, cfg), KVCache(k_c, v_c)
+
+
+def attention_decode_paged(
+    p: Dict, x: Array, cfg: ArchConfig, *, kind: str, position: Array,
+    cache: PagedKV, block_table: Array,
+) -> Tuple[Array, PagedKV]:
+    """One-token decode against the paged pool. block_table [B, nb] int32
+    maps each slot's logical block index to a physical block; -1 marks an
+    unallocated block (writes to it are dropped, reads are masked).
+
+    The slot's blocks are gathered back into the dense ring layout before
+    the same masked SDPA as `attention_decode`, so for identical cache
+    content the logits are bit-identical to the dense path: masked entries
+    score NEG_INF in both, their softmax weight underflows to exactly 0.0,
+    and 0.0 * garbage == 0.0 leaves the value sum untouched. A fused
+    gather-free paged-attention kernel is the TPU follow-up (ROADMAP)."""
+    b = x.shape[0]
+    k_, hd = cfg.n_kv_heads, cfg.head_dim
+    q, k_new, v_new, pos = _decode_qkv(p, x, cfg, position)
+
+    n_blocks, bs = cache.k.shape[0], cache.k.shape[1]
+    nb = block_table.shape[1]
+    l = nb * bs
+    slot = _ring_slot(pos, l, kind)
+    blk, off = slot // bs, slot % bs
+    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    # unallocated (-1) -> out-of-range sentinel, dropped by the scatter
+    phys_w = jnp.where(phys >= 0, phys, n_blocks)
+    k_pool = cache.k.at[phys_w, off].set(
+        k_new[:, 0].astype(cache.k.dtype), mode="drop")
+    v_pool = cache.v.at[phys_w, off].set(
+        v_new[:, 0].astype(cache.v.dtype), mode="drop")
+
+    tbl = jnp.maximum(block_table, 0)          # garbage reads get masked
+    k_c = k_pool[tbl].reshape(b, l, k_, hd)
+    v_c = v_pool[tbl].reshape(b, l, k_, hd)
+
+    valid = _decode_mask(pos, l, kind, cfg.local_window)
+    valid &= jnp.repeat(block_table >= 0, bs, axis=1)
+    out = _sdpa(q, k_c, v_c, valid[:, None, :], cfg).reshape(b, 1, -1)
+    return ll.linear_apply(p["wo"], out, cfg), PagedKV(k_pool, v_pool)

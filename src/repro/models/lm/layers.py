@@ -10,8 +10,9 @@ Params are fp32 (master copies); compute casts to cfg.dtype (bf16).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,58 @@ Params = Dict[str, Any]
 
 def cdtype(cfg: ArchConfig):
     return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# psum-sparsity tap (serve telemetry)
+# ---------------------------------------------------------------------------
+# The paper's buffer/accumulation savings (29.3% / 47.9%) are driven by the
+# fraction of crossbar psums the dendritic gate zeroes. The serve engine
+# reports that quantity as a live metric: while a tap is active, every
+# segmented-CADC linear_apply on the XLA path appends one record of traced
+# scalars. Python-level state, touched only at TRACE time — the jitted
+# telemetry step opens the tap around the decode call and returns the
+# traced values, so the metric flows out of jit as ordinary outputs. The
+# fused Pallas kernels never materialize psums (that is their point), so
+# the telemetry step runs with kernel_impl='xla'.
+
+_PSUM_TAP: Optional[List[Dict[str, Any]]] = None
+_TAP_SCOPE: List[str] = []
+
+
+@contextlib.contextmanager
+def psum_stats_tap():
+    """Collect per-linear psum sparsity records during tracing."""
+    global _PSUM_TAP
+    prev = _PSUM_TAP
+    _PSUM_TAP = []
+    try:
+        yield _PSUM_TAP
+    finally:
+        _PSUM_TAP = prev
+
+
+@contextlib.contextmanager
+def tap_scope(label: str):
+    """Label tap records emitted inside (layer name in the decode loop)."""
+    _TAP_SCOPE.append(label)
+    try:
+        yield
+    finally:
+        _TAP_SCOPE.pop()
+
+
+def _tap_record(psums32: Array, fn: str, segments: int) -> None:
+    if _PSUM_TAP is None:
+        return
+    gate = dendritic.grad(fn)(psums32)
+    scope = _TAP_SCOPE[-1] if _TAP_SCOPE else "linear"
+    _PSUM_TAP.append({
+        "label": f"{scope}/{sum(1 for r in _PSUM_TAP if r['label'].startswith(scope))}",
+        "gate_off": jnp.mean((gate == 0).astype(jnp.float32)),
+        "exact_zero": jnp.mean((psums32 == 0).astype(jnp.float32)),
+        "segments": segments,
+    })
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +140,9 @@ def linear_apply(p: Params, x: Array, cfg: ArchConfig) -> Array:
             "...sk,skn->...sn", xs, w.astype(cdtype(cfg)),
             preferred_element_type=acc,
         )
-        y = jnp.sum(f(psums.astype(jnp.float32)), axis=-2).astype(cdtype(cfg))
+        ps32 = psums.astype(jnp.float32)
+        _tap_record(ps32, cfg.dendritic_fn, s)
+        y = jnp.sum(f(ps32), axis=-2).astype(cdtype(cfg))
     else:
         y = jnp.einsum(
             "...k,kn->...n", x.astype(cdtype(cfg)), w.astype(cdtype(cfg)),

@@ -10,6 +10,14 @@ inline.
 
 Train path returns fp32 logits (+ MoE aux loss); decode path threads
 per-layer caches (KV / recurrent states) through the same scan.
+
+Serving (PR 3): `decode_step` takes per-slot position vectors, and the
+paged twins (`init_paged_caches` / `decode_step_paged`) run the same stack
+against block-table-indexed KV pools — the substrate of the continuous-
+batching engine in repro.serve. `forward_prefill` is the batched prefill:
+one full-sequence forward that also returns every layer's cache
+contribution (rope'd K/V for attention, final recurrent states at each
+slot's own prompt length) for scatter-insertion into either cache layout.
 """
 from __future__ import annotations
 
@@ -101,20 +109,36 @@ def _layer_train(p: Params, x: Array, kind: str, cfg: ArchConfig,
     raise ValueError(kind)
 
 
-def _layer_decode(p: Params, x: Array, kind: str, cfg: ArchConfig,
-                  position: Array, cache):
-    if kind in ("global", "local"):
-        h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
-        y, cache = attn.attention_decode(p["attn"], h, cfg, kind=kind,
-                                         position=position, cache=cache)
+def _attn_residual(p: Params, x: Array, cfg: ArchConfig, attn_fn):
+    """The attention residual block shared by the decode/paged-decode/
+    prefill paths: ln1 -> attn_fn -> residual -> ln2 -> moe/ffn.
+    attn_fn(h) -> (y, extra); `extra` is the cache / KV contribution.
+    ONE implementation on purpose — the CI-gated paged/dense parity
+    invariant assumes these paths cannot drift apart."""
+    h = ll.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    y, extra = attn_fn(h)
+    x = x + y
+    h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe.n_experts > 0:
+        y, _ = moe_lib.moe_apply(p["moe"], h, cfg)
         x = x + y
-        h = ll.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
-        if cfg.moe.n_experts > 0:
-            y, _ = moe_lib.moe_apply(p["moe"], h, cfg)
-            x = x + y
-        elif cfg.ffn_type != "none":
-            x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
-        return x, cache
+    elif cfg.ffn_type != "none":
+        x = x + ffn_lib.ffn_apply(p["ffn"], h, cfg)
+    return x, extra
+
+
+def _layer_decode(p: Params, x: Array, kind: str, cfg: ArchConfig,
+                  position: Array, cache, block_tables=None):
+    """block_tables None -> dense ring cache; a per-kind table dict ->
+    paged pools (attention kinds only; recurrent caches are identical
+    in both layouts)."""
+    if kind in ("global", "local"):
+        if block_tables is None:
+            return _attn_residual(p, x, cfg, lambda h: attn.attention_decode(
+                p["attn"], h, cfg, kind=kind, position=position, cache=cache))
+        return _attn_residual(p, x, cfg, lambda h: attn.attention_decode_paged(
+            p["attn"], h, cfg, kind=kind, position=position, cache=cache,
+            block_table=block_tables[kind]))
     if kind == "mlstm":
         y, cache = xlstm_lib.mlstm_decode(p["block"], x, cfg, cache)
         return x + y, cache
@@ -153,6 +177,13 @@ def _layout(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
     reps = cfg.n_layers // p if cfg.scan_layers else 0
     tail = cfg.pattern_for_layers[reps * p :]
     return reps, cfg.pattern, tail
+
+
+def layout(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """Public stack layout: (scan_reps, pattern, tail_kinds). The caches
+    pytree mirrors it: caches['units'][j] is pattern position j stacked
+    over reps; caches['tail'][i] belongs to tail kind i."""
+    return _layout(cfg)
 
 
 def init(key, cfg: ArchConfig) -> Params:
@@ -270,9 +301,8 @@ def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
     return {"units": units, "tail": tails}
 
 
-def decode_step(params: Params, tokens: Array, position: Array, caches,
-                cfg: ArchConfig) -> Tuple[Array, Any]:
-    """One decode step: tokens [B] int32 -> logits [B, V], new caches."""
+def _decode_driver(params: Params, tokens: Array, position: Array, caches,
+                   cfg: ArchConfig, block_tables) -> Tuple[Array, Any]:
     reps, pattern, tail = _layout(cfg)
     x = ll.embed(params["embed"], tokens[:, None], cfg)
 
@@ -281,7 +311,7 @@ def decode_step(params: Params, tokens: Array, position: Array, caches,
         new_caches = []
         for j, kind in enumerate(pattern):
             x, c = _layer_decode(unit_params[j], x, kind, cfg, position,
-                                 unit_caches[j])
+                                 unit_caches[j], block_tables)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -294,13 +324,150 @@ def decode_step(params: Params, tokens: Array, position: Array, caches,
 
     new_tail = []
     for i, kind in enumerate(tail):
-        x, c = _layer_decode(params["tail"][i], x, kind, cfg, position,
-                             caches["tail"][i])
+        with ll.tap_scope(f"tail{i:02d}.{kind}"):
+            x, c = _layer_decode(params["tail"][i], x, kind, cfg, position,
+                                 caches["tail"][i], block_tables)
         new_tail.append(c)
 
     x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = ll.lm_head(params.get("head"), params["embed"], x, cfg)
     return logits[:, 0], {"units": new_unit_caches, "tail": tuple(new_tail)}
+
+
+def decode_step(params: Params, tokens: Array, position: Array, caches,
+                cfg: ArchConfig) -> Tuple[Array, Any]:
+    """One decode step: tokens [B] int32 -> logits [B, V], new caches.
+    position: scalar int32 (whole batch at one index) or [B] vector
+    (continuous batching: every cache slot at its own offset)."""
+    return _decode_driver(params, tokens, position, caches, cfg, None)
+
+
+def decode_step_paged(params: Params, tokens: Array, position: Array, caches,
+                      block_tables: Dict[str, Array], cfg: ArchConfig
+                      ) -> Tuple[Array, Any]:
+    """decode_step against paged KV pools. block_tables: one [B, nb] int32
+    table per attention kind present in the pattern (shared by every layer
+    of that kind; -1 marks unallocated blocks). Bit-identical logits to
+    decode_step when the pools hold the same entries the dense ring does."""
+    return _decode_driver(params, tokens, position, caches, cfg, block_tables)
+
+
+# ---------------------------------------------------------------------------
+# paged cache init (block-table KV pools; repro.serve drives this)
+# ---------------------------------------------------------------------------
+
+def init_paged_caches(cfg: ArchConfig, n_slots: int, block_size: int,
+                      n_blocks: Dict[str, int], max_len: int, dtype=None):
+    """Paged mirror of init_caches. Attention layers hold PagedKV pools
+    ([reps?, n_blocks[kind], block_size, K, hd]); recurrent layers keep
+    per-slot state rows exactly as the dense layout (batch == n_slots).
+    Every layer of one attention kind shares the engine's single block
+    table for that kind (vLLM-style: one table, all layers)."""
+    dtype = dtype or ll.cdtype(cfg)
+    reps, pattern, tail = _layout(cfg)
+
+    def one(kind):
+        if kind in ("global", "local"):
+            return attn.init_paged_pool(cfg, n_blocks[kind], block_size,
+                                        dtype)
+        return _init_layer_cache(kind, cfg, n_slots, max_len, dtype)
+
+    def stack(kind):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (reps, *a.shape)).copy(), one(kind)
+        )
+
+    units = tuple(stack(kind) for kind in pattern) if reps > 0 else ()
+    tails = tuple(one(kind) for kind in tail)
+    return {"units": units, "tail": tails}
+
+
+# ---------------------------------------------------------------------------
+# batched prefill (full-sequence forward that yields cache contributions)
+# ---------------------------------------------------------------------------
+
+def _layer_prefill(p: Params, x: Array, kind: str, cfg: ArchConfig,
+                   positions: Array, lengths: Array):
+    """Returns (x, contrib): contrib is (k, v) [B, S, K, hd] for attention
+    layers, the final per-slot recurrent state otherwise. Recurrent kinds
+    scan the DECODE cell over time (state updates frozen at t >= length —
+    ragged prompts), which makes their prefill state bit-identical to
+    feeding the prompt through the decode path token by token."""
+    if kind in ("global", "local"):
+        return _attn_residual(p, x, cfg, lambda h: attn.attention_prefill(
+            p["attn"], h, cfg, kind=kind, positions=positions))
+
+    b, s = x.shape[0], x.shape[1]
+    state0 = _init_layer_cache(kind, cfg, b, s, ll.cdtype(cfg))
+
+    def step(state, t):
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)
+        yt, new = _layer_decode(p, xt, kind, cfg, t, state)
+        keep = t < lengths  # [B] — freeze state past each slot's prompt
+        new = jax.tree_util.tree_map(
+            lambda nl, ol: jnp.where(
+                keep.reshape((b,) + (1,) * (nl.ndim - 1)), nl, ol),
+            new, state)
+        return new, yt[:, 0]
+
+    final, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def forward_prefill(params: Params, batch: Dict[str, Array], cfg: ArchConfig,
+                    *, lengths: Optional[Array] = None) -> Tuple[Array, Any]:
+    """Batched prefill over left-aligned prompts (positions 0..S-1), with
+    per-slot prompt lengths [B] (padded tail tokens contribute garbage the
+    cache writers mask out). Returns (logits fp32 [B, S, V], contribs)
+    where contribs mirrors the init_caches structure."""
+    reps, pattern, tail = _layout(cfg)
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[0], x.shape[1]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    positions = jnp.arange(s)[None, :]
+
+    def unit_body(x, unit_params):
+        contribs = []
+        for j, kind in enumerate(pattern):
+            x, c = _layer_prefill(unit_params[j], x, kind, cfg, positions,
+                                  lengths)
+            contribs.append(c)
+        return x, tuple(contribs)
+
+    if reps > 0:
+        x, unit_contribs = jax.lax.scan(unit_body, x, params["units"])
+    else:
+        unit_contribs = ()
+
+    tail_contribs = []
+    for i, kind in enumerate(tail):
+        x, c = _layer_prefill(params["tail"][i], x, kind, cfg, positions,
+                              lengths)
+        tail_contribs.append(c)
+
+    x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = ll.lm_head(params.get("head"), params["embed"], x, cfg)
+    return logits, {"units": unit_contribs, "tail": tuple(tail_contribs)}
+
+
+def unstack_tree(tree, cfg: ArchConfig):
+    """Re-layout a scan-stacked params/caches pytree ({'units', 'tail'})
+    for cfg.with_overrides(scan_layers=False): units[j][r] slices become
+    inline tail entries in stack order. Used by the serve telemetry step,
+    which must run unscanned so the per-layer psum tap can label layers."""
+    reps, pattern, tail_kinds = _layout(cfg)
+    units = tree.get("units", ())
+    out_tail = []
+    for r in range(reps):
+        for j in range(len(pattern)):
+            out_tail.append(jax.tree_util.tree_map(
+                lambda a, r=r: a[r], units[j]))
+    out_tail.extend(tree["tail"])
+    out = dict(tree)
+    out["units"] = ()
+    out["tail"] = tuple(out_tail)
+    return out
 
 
 def param_count(params: Params) -> int:

@@ -230,6 +230,46 @@ def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 
 
+def paged_cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Sharding rules for the serve engine's paged caches.
+
+    KV pools [*, n_blocks, block_size, K, hd]: kv-heads over 'model' when
+    divisible (the head-parallel decode layout). The BLOCK axis stays
+    unsharded — a block is the paging granule; any slot's table row must
+    be able to name any physical block without cross-device gathers being
+    forced by an arbitrary allocator decision. If kv-heads don't divide
+    the axis, pools replicate (the block-parallel fallback — splitting
+    block_size over 'model' like the dense length-parallel rule — is a
+    ROADMAP item: it needs the gather to stay local to the table row).
+    Recurrent state rows [n_slots, ...] follow the dense rule: slots over
+    the DP axes when divisible."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_lib.axis_size(mesh, a)
+    model = mesh_lib.axis_size(mesh, "model")
+    h_ax = "model" if cfg.n_kv_heads % model == 0 else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        stacked = "units" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        if names[-1] in ("k", "v") and nd == 4:  # [n_blocks, bs, K, hd]
+            spec = P(None, None, h_ax, None)
+        elif nd >= 1:                            # recurrent rows [n_slots,..]
+            n_slots = leaf.shape[1 if stacked else 0]
+            b_ax = (dp if n_slots % dp_size == 0 and n_slots >= dp_size
+                    else None)
+            spec = P(b_ax, *([None] * (nd - 1)))
+        else:
+            spec = P()
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
 def to_named(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -1,0 +1,34 @@
+"""Continuous-batching serve engine over the CADC decode path.
+
+The subsystem the ROADMAP's serving story grows from:
+
+  * engine.ServeEngine   — admission queue, slot allocation, finished-
+                           sequence eviction + slot reuse, interleaved
+                           batched-prefill / decode scheduling.
+  * blocks               — host-side paged-KV block allocator + per-kind
+                           block tables (vLLM-style: one table per
+                           attention kind, shared by every layer).
+  * backends             — the jitted device programs: 'paged' (block
+                           tables over KV pools) and 'dense' (per-slot
+                           ring caches) share the same engine; paged
+                           decode is bit-identical to dense by
+                           construction (tests/test_serve_engine.py).
+  * telemetry            — tokens/s, TTFT, p50/p99 step latency, and the
+                           paper's psum-sparsity signal tapped live from
+                           the decode path.
+  * workload             — Poisson-style synthetic arrival streams.
+"""
+from repro.serve.blocks import BlockAllocator, BlockTables
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.telemetry import Telemetry
+from repro.serve.workload import poisson_workload
+
+__all__ = [
+    "BlockAllocator",
+    "BlockTables",
+    "EngineConfig",
+    "Request",
+    "ServeEngine",
+    "Telemetry",
+    "poisson_workload",
+]

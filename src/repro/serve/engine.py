@@ -1,0 +1,443 @@
+"""ServeEngine: continuous batching over the CADC decode path.
+
+One engine iteration = (admit waiting requests into free slots) ->
+(batched prefill for the admissions) -> (one decode step across all
+slots). Every slot runs at its own sequence position (the per-slot
+position vectors PR 3 added to the decode path); finished sequences are
+evicted, their slot and — under the paged backend — their physical KV
+blocks immediately reusable. Admission is FIFO with head-of-line
+blocking on slot/block availability (priority scheduling is a ROADMAP
+item).
+
+Prefill modes:
+  * 'batched' (default): one full-sequence forward for all admissions of
+    the iteration (ragged prompt lengths; transformer.forward_prefill),
+    cache contributions scatter-inserted in the cache layout's native
+    format. First token falls out of the prefill logits — TTFT is one
+    forward, not P decode steps.
+  * 'decode': the legacy token-at-a-time path — each prefill-phase slot
+    feeds its next prompt token through the ordinary decode step. Slower,
+    but preserves the cache-consistency invariant exactly (decode-built
+    caches), which the parity tests anchor on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch import steps as steps_lib
+from repro.launch.steps import cast_compute
+from repro.models.lm import layers as ll
+from repro.models.lm import transformer as tf
+from repro.serve import backends as backends_lib
+from repro.serve.blocks import BlockTables
+from repro.serve.telemetry import Telemetry
+
+IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [P] int32
+    max_new: int
+    arrival_step: int = 0
+    # vit-frontend archs: image embeddings [frontend_len, frontend_dim]
+    # overlaying the first frontend_len prompt positions (the model's
+    # _embed_inputs semantics — those positions ARE the image). None ->
+    # zeros (text-only synthetic serving).
+    patches: Optional[np.ndarray] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 256
+    block_size: int = 16
+    backend: str = "paged"            # 'paged' | 'dense'
+    prefill_mode: str = "batched"     # 'batched' | 'decode'
+    telemetry_every: int = 0          # psum-sparsity sample period (0=off)
+    record_logits: bool = False       # keep per-token logits (tests/bench)
+    eos_token: Optional[int] = None
+    n_blocks: Optional[Dict[str, int]] = None  # paged pool sizes (per kind)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        if ecfg.prefill_mode not in ("batched", "decode"):
+            raise ValueError(f"bad prefill_mode {ecfg.prefill_mode!r}")
+        if cfg.frontend == "vit" and ecfg.prefill_mode == "decode":
+            raise ValueError("vit-frontend archs need prefill_mode='batched'")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.params = params
+        self.backend = backends_lib.make_backend(
+            ecfg.backend, cfg, ecfg.n_slots, ecfg.max_len,
+            ecfg.block_size, ecfg.n_blocks)
+        self.caches = self.backend.init_caches()
+        self.tables: Optional[BlockTables] = None
+        if ecfg.backend == "paged":
+            self.tables = BlockTables(
+                ecfg.n_slots, self.backend.blocks_per_slot,
+                self.backend.n_blocks)
+        self.telemetry = Telemetry()
+
+        n = ecfg.n_slots
+        self.slot_req: List[Optional[Request]] = [None] * n
+        self.slot_phase = [IDLE] * n
+        self.slot_pos = np.zeros(n, np.int32)
+        self.slot_last = np.zeros(n, np.int32)
+        self.slot_uses = np.zeros(n, np.int64)  # admissions per slot
+
+        self.queue: deque[Request] = deque()
+        self.results: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._it = 0
+        # jit's own shape-keyed cache handles per-bucket retraces; the
+        # _bucket padding just bounds how many shapes it ever sees
+        self._prefill_fn = jax.jit(steps_lib.make_batched_prefill_step(cfg))
+        self._stats_fn = None
+        self._dev_tables_cache = None
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new: int, *,
+               arrival_step: int = 0, rid: Optional[int] = None,
+               patches: Optional[np.ndarray] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"max_len={self.ecfg.max_len}")
+        if patches is not None:
+            want = (self.cfg.frontend_len, self.cfg.frontend_dim)
+            if self.cfg.frontend != "vit":
+                raise ValueError(f"{self.cfg.name} takes no patches")
+            if tuple(np.shape(patches)) != want:
+                raise ValueError(f"patches must be {want}")
+            if prompt.size < self.cfg.frontend_len:
+                # the image occupies positions 0..frontend_len-1; a
+                # shorter prompt would cache (and attend) a truncated
+                # image without any error surfacing
+                raise ValueError(
+                    f"vit prompts must span the image prefix: need "
+                    f">= frontend_len={self.cfg.frontend_len} tokens, "
+                    f"got {prompt.size}")
+        if rid is None:
+            rid = self._next_rid
+        elif (rid in self.results
+              or any(r.rid == rid for r in self.queue)
+              or any(r is not None and r.rid == rid for r in self.slot_req)):
+            raise ValueError(f"rid {rid} already in use")
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
+                      arrival_step=arrival_step, patches=patches)
+        # keep FIFO-by-arrival; re-sort only on out-of-order submission
+        # (workload generators already emit in arrival order)
+        out_of_order = bool(self.queue) and (
+            (self.queue[-1].arrival_step, self.queue[-1].rid)
+            > (arrival_step, rid))
+        self.queue.append(req)
+        if out_of_order:
+            self.queue = deque(sorted(
+                self.queue, key=lambda r: (r.arrival_step, r.rid)))
+        return rid
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(p != IDLE for p in self.slot_phase)
+
+    def reset_metrics(self) -> None:
+        """Restart telemetry, results, the step clock and allocator
+        diagnostics — call between a warmup run (which compiles every
+        jitted program) and the measured run, so percentiles and the
+        slot/block-reuse gates reflect serving, not compilation. The
+        engine must be drained (no queued or active requests)."""
+        if self.has_work():
+            raise RuntimeError("reset_metrics on a non-drained engine")
+        self.telemetry = Telemetry()
+        self.results = {}
+        self._it = 0
+        self.slot_uses[:] = 0
+        if self.tables is not None:
+            self.tables.reset_stats()
+
+    def run(self, workload: Optional[Sequence[Tuple[int, np.ndarray, int]]]
+            = None, *, max_steps: int = 100_000) -> Dict[str, Any]:
+        """Drain `workload` [(arrival_step, prompt, max_new)] (plus
+        anything already submitted) and return the telemetry summary."""
+        for arrival, prompt, max_new in (workload or []):
+            self.submit(prompt, max_new, arrival_step=arrival)
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        summary = self.telemetry.summary()
+        summary["slot_uses"] = self.slot_uses.tolist()
+        if self.tables is not None:
+            summary["blocks"] = self.tables.stats()
+        return summary
+
+    def step(self) -> None:
+        it = self._it
+        self._it += 1
+        now = self.telemetry.now()
+        for req in self.queue:  # sorted by arrival: stop at the future
+            if req.arrival_step > it:
+                break
+            trace = self.telemetry.trace(req.rid)
+            if trace.arrival_wall is None:
+                trace.arrival_wall = now
+
+        admitted = self._admit(it)
+        if admitted:
+            mask = np.zeros(self.ecfg.n_slots, bool)
+            for slot, _ in admitted:
+                mask[slot] = True
+            # recurrent slots restart from their init state; stale KV
+            # needs no reset (ring masking never reads it)
+            self.caches = self.backend.reset_slots(self.caches,
+                                                   jnp.asarray(mask))
+            if self.ecfg.prefill_mode == "batched":
+                self._batched_prefill(admitted)
+
+        if not any(p != IDLE for p in self.slot_phase):
+            return
+
+        if (self.ecfg.telemetry_every
+                and it % self.ecfg.telemetry_every == 0):
+            self._sample_sparsity()
+        self._decode_step()
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+
+    def _admit(self, it: int) -> List[Tuple[int, Request]]:
+        admitted = []
+        while self.queue and self.queue[0].arrival_step <= it:
+            try:
+                slot = self.slot_phase.index(IDLE)
+            except ValueError:
+                break
+            if self.tables is not None and not self.tables.assign(slot):
+                break  # pool exhausted: head-of-line waits for an eviction
+            req = self.queue.popleft()
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = 0
+            self.slot_last[slot] = req.prompt[0]
+            self.slot_phase[slot] = PREFILL
+            self.slot_uses[slot] += 1
+            admitted.append((slot, req))
+            self._dev_tables_cache = None  # tables changed -> re-upload
+        return admitted
+
+    def _evict(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        trace = self.telemetry.trace(req.rid)
+        trace.finish_wall = self.telemetry.now()
+        trace.n_generated = len(req.tokens)
+        req.done = True
+        self.results[req.rid] = req
+        self.slot_req[slot] = None
+        self.slot_phase[slot] = IDLE
+        if self.tables is not None:
+            self.tables.release(slot)
+            self._dev_tables_cache = None
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        eos = (self.ecfg.eos_token is not None and req.tokens
+               and req.tokens[-1] == self.ecfg.eos_token)
+        out_of_room = self.slot_pos[slot] >= self.ecfg.max_len
+        if len(req.tokens) >= req.max_new or eos or out_of_room:
+            self._evict(slot)
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
+    def _device_tables(self):
+        if self.tables is None:
+            return None
+        if self._dev_tables_cache is None:
+            self._dev_tables_cache = self.tables.device_tables()
+        return self._dev_tables_cache
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def _batched_prefill(self, admitted: List[Tuple[int, Request]]) -> None:
+        cfg, n = self.cfg, self.ecfg.n_slots
+        s_pad = self._bucket(max(len(r.prompt) for _, r in admitted))
+        if cfg.frontend == "vit":
+            s_pad = max(s_pad, self._bucket(cfg.frontend_len))
+        tokens = np.zeros((n, s_pad), np.int32)
+        lengths = np.zeros(n, np.int32)
+        slot_ids = np.full(n, n, np.int32)  # sentinel rows -> dropped
+        for i, (slot, req) in enumerate(admitted):
+            tokens[i, : req.prompt.size] = req.prompt
+            lengths[i] = req.prompt.size
+            slot_ids[i] = slot
+        batch = {"tokens": jnp.asarray(tokens)}
+        if cfg.frontend == "vit":
+            # _embed_inputs overlays these onto the FIRST frontend_len
+            # prompt positions (the model's VLM layout: those positions
+            # are the image). Requests without patches get zeros — note
+            # that prompts shorter than frontend_len are then fully
+            # covered by the (zero) image prefix, as in training.
+            patches = np.zeros((n, cfg.frontend_len, cfg.frontend_dim),
+                               np.float32)
+            for i, (_, req) in enumerate(admitted):
+                if req.patches is not None:
+                    patches[i] = req.patches
+            batch["patches"] = jnp.asarray(patches)
+
+        t0 = time.perf_counter()
+        first, last, contribs = self._prefill_fn(
+            self.params, batch, jnp.asarray(lengths))
+        self.caches = self.backend.write_prefill(
+            self.caches, contribs, jnp.asarray(slot_ids),
+            jnp.asarray(lengths), self._device_tables())
+        first_np = np.asarray(first)
+        last_np = np.asarray(last) if self.ecfg.record_logits else None
+        self.telemetry.record_prefill(time.perf_counter() - t0)
+
+        now = self.telemetry.now()
+        for i, (slot, req) in enumerate(admitted):
+            tok = int(first_np[i])
+            req.tokens.append(tok)
+            if last_np is not None:
+                req.logits.append(last_np[i])
+            trace = self.telemetry.trace(req.rid)
+            trace.first_token_wall = now
+            if trace.arrival_wall is None:
+                trace.arrival_wall = now
+            self.slot_pos[slot] = req.prompt.size
+            self.slot_last[slot] = tok
+            self.slot_phase[slot] = DECODE
+            self._maybe_finish(slot)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def _decode_step(self) -> None:
+        n = self.ecfg.n_slots
+        tokens = np.zeros(n, np.int32)
+        for s in range(n):
+            if self.slot_phase[s] == DECODE:
+                tokens[s] = self.slot_last[s]
+            elif self.slot_phase[s] == PREFILL:
+                tokens[s] = self.slot_req[s].prompt[self.slot_pos[s]]
+        positions = self.slot_pos.copy()
+
+        t0 = time.perf_counter()
+        nxt, logits, self.caches = self.backend.decode(
+            self.params, self.caches, self._device_tables(),
+            jnp.asarray(tokens), jnp.asarray(positions))
+        nxt_np = np.asarray(nxt)
+        logits_np = np.asarray(logits) if self.ecfg.record_logits else None
+        dt = time.perf_counter() - t0
+
+        emitted = 0
+        now = self.telemetry.now()
+        for s in range(n):
+            req = self.slot_req[s]
+            if self.slot_phase[s] == DECODE:
+                tok = int(nxt_np[s])
+                req.tokens.append(tok)
+                if logits_np is not None:
+                    req.logits.append(logits_np[s])
+                self.slot_last[s] = tok
+                self.slot_pos[s] += 1
+                emitted += 1
+                self._maybe_finish(s)
+            elif self.slot_phase[s] == PREFILL:
+                self.slot_pos[s] += 1
+                if self.slot_pos[s] == req.prompt.size:
+                    tok = int(nxt_np[s])
+                    req.tokens.append(tok)
+                    if logits_np is not None:
+                        req.logits.append(logits_np[s])
+                    trace = self.telemetry.trace(req.rid)
+                    trace.first_token_wall = now
+                    if trace.arrival_wall is None:
+                        trace.arrival_wall = now
+                    self.slot_last[s] = tok
+                    self.slot_phase[s] = DECODE
+                    emitted += 1
+                    self._maybe_finish(s)
+        self.telemetry.record_step(dt, emitted)
+
+    # ------------------------------------------------------------------
+    # telemetry probe
+    # ------------------------------------------------------------------
+
+    def _sample_sparsity(self) -> None:
+        if self.cfg.linear_impl != "cadc":
+            return
+        if self._stats_fn is None:
+            cfg = self.cfg
+            ucfg = cfg.with_overrides(scan_layers=False, kernel_impl="xla")
+            paged = self.ecfg.backend == "paged"
+
+            def stats(params, caches, tables, tokens, positions):
+                # unstacked IN-trace (like the caches): no persistent
+                # 2x-params copy lives on device for telemetry's sake
+                params_u = tf.unstack_tree(params, cfg)
+                caches_u = tf.unstack_tree(caches, cfg)
+                with ll.psum_stats_tap() as tap:
+                    if paged:
+                        tf.decode_step_paged(
+                            cast_compute(params_u, ucfg), tokens, positions,
+                            caches_u, tables, ucfg)
+                    else:
+                        tf.decode_step(
+                            cast_compute(params_u, ucfg), tokens, positions,
+                            caches_u, ucfg)
+                    recs = list(tap)
+                return {
+                    r["label"]: {"gate_off": r["gate_off"],
+                                 "exact_zero": r["exact_zero"],
+                                 "segments": r["segments"]}
+                    for r in recs
+                }
+
+            self._stats_fn = jax.jit(stats)
+
+        n = self.ecfg.n_slots
+        tokens = np.array(
+            [self.slot_last[s] if self.slot_phase[s] != IDLE else 0
+             for s in range(n)], np.int32)
+        out = self._stats_fn(self.params, self.caches,
+                             self._device_tables(), jnp.asarray(tokens),
+                             jnp.asarray(self.slot_pos))
+        self.telemetry.record_sparsity(
+            {k: {kk: np.asarray(vv) for kk, vv in v.items()}
+             for k, v in out.items()})

@@ -1,0 +1,75 @@
+"""Regression: ADC noise must NOT be silently skipped under mode.kernel.
+
+The fused Pallas kernels never materialize psums (that is their point), so
+a LayerMode that requests BOTH the fused kernel and the ADC psum model
+must fall back to the reference path and still apply the transform —
+layer outputs bit-identical to kernel='xla' with the same rng, and
+distinct from the noise-free output. Guarded by _use_fused/_use_q8 in
+models/common.py; this test pins the contract for linear, conv and the
+q8 route.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import adc as adc_lib
+from repro.core.quant import QuantConfig
+from repro.models import common as mc
+
+KEY = jax.random.PRNGKey(0)
+ADC = adc_lib.AdcConfig(bits=4)
+RNG = jax.random.PRNGKey(7)
+
+
+def _linear(kernel, adc, *, quant=None, q8=False, rng=RNG):
+    mode = mc.LayerMode(impl="cadc", crossbar_size=64, kernel=kernel,
+                        adc=adc, quant=quant or mc.FP32, q8_fused=q8)
+    p = {"w": jax.random.normal(KEY, (96, 32)),
+         "b": jnp.zeros((32,))}
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 96))
+    return mc.linear_forward(p, x, mc.Ctx(mode, rng))
+
+
+def _conv(kernel, adc, rng=RNG):
+    mode = mc.LayerMode(impl="cadc", crossbar_size=32, kernel=kernel,
+                        adc=adc)
+    p = {"w": jax.random.normal(KEY, (3, 3, 8, 16)) * 0.1}
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 8, 8, 8))
+    return mc.conv_forward(p, x, mc.Ctx(mode, rng))
+
+
+@pytest.mark.parametrize("kernel", ["interpret", "auto"])
+def test_linear_adc_survives_kernel_mode(kernel):
+    y_ref = _linear("xla", ADC)
+    y_kernel = _linear(kernel, ADC)
+    y_clean = _linear("xla", None)
+    assert jnp.array_equal(y_kernel, y_ref), "kernel path lost ADC noise"
+    assert not jnp.array_equal(y_kernel, y_clean), \
+        "ADC transform was silently skipped"
+
+
+@pytest.mark.parametrize("kernel", ["interpret", "auto"])
+def test_conv_adc_survives_kernel_mode(kernel):
+    y_ref = _conv("xla", ADC)
+    y_kernel = _conv(kernel, ADC)
+    y_clean = _conv("xla", None)
+    assert jnp.array_equal(y_kernel, y_ref)
+    assert not jnp.array_equal(y_kernel, y_clean)
+
+
+def test_q8_fused_with_adc_falls_back():
+    """q8_fused + adc: the int8 fused route must yield to the fake-quant
+    reference path so the psum transform still applies."""
+    q = QuantConfig(input_bits=4, weight_bits=2, enabled=True)
+    y_ref = _linear("xla", ADC, quant=q, q8=True)
+    y_kernel = _linear("interpret", ADC, quant=q, q8=True)
+    y_clean = _linear("xla", None, quant=q, q8=True)
+    assert jnp.array_equal(y_kernel, y_ref)
+    assert not jnp.array_equal(y_kernel, y_clean)
+
+
+def test_deterministic_given_rng():
+    assert jnp.array_equal(_linear("interpret", ADC), _linear("interpret", ADC))
+    assert not jnp.array_equal(
+        _linear("interpret", ADC),
+        _linear("interpret", ADC, rng=jax.random.PRNGKey(8)))
