@@ -4,24 +4,51 @@ Runs the repro.serve engine on smoke-size archs with CADC linears
 (linear_impl='cadc') on the decode path: a synthetic arrival stream with
 more requests than slots, so admission queueing, eviction and slot/block
 reuse are all on the measured path. Reports tokens/s, TTFT and p50/p99
-step latency per (arch, backend), plus the paged-vs-dense bit-parity
-verdict and the per-layer CADC psum-sparsity telemetry (the paper's
-buffer/accumulation-saving signal as a live serving metric).
+step latency per (arch, backend), the paged-vs-dense bit-parity verdict,
+the fused-vs-gather paged-attention numbers, and the per-layer CADC
+psum-sparsity telemetry (sampled every TELEMETRY_EVERY steps — each
+sample re-runs one decode step with xla kernels, so steady-state steps
+must not pay it; the rate is reported alongside the numbers).
+
+Methodology
+-----------
+* max_len provisions HEADROOM (128 tokens for ~16-token requests), the
+  realistic serving shape: engines provision for the longest admissible
+  request. The paged backend only touches the covered prefix of each
+  slot's block table (dead-block skipping — the XLA twin of the fused
+  kernel's pl.when chunk skip), while the dense rings are fixed-shape:
+  full-length attention every step. This is paging's structural win and
+  the reason the paged backend is gated to no longer trail dense.
+* throughput is the best of TRIALS interleaved (paged, dense) measured
+  runs over identical workloads — identical methodology per backend, and
+  best-of-R so one scheduler hiccup on a shared CI box cannot decide the
+  verdict. The HEADLINE tokens/s is the steady-state p50-based number
+  (median step latency x tokens/step): a single 40 ms host stall in a
+  ~50 ms measured run halves the mean-based figure while changing nothing
+  about the serving path, so the mean is recorded as tokens_per_s_mean
+  but never gated on.
+* the fused kernel is benched at the attention-op level: on CPU it runs
+  in INTERPRET mode (a correctness reference, expected slower than the
+  gather; the recorded ratio documents that) and is parity-gated against
+  the gather oracle; the wall-clock win is a TPU measurement (ROADMAP).
 
 Besides the per-table CSV/JSON of benchmarks/common.py, the run writes
 BENCH_serve.json at the repo root — the serving twin of
-BENCH_kernels.json. CI uploads it per PR so the serving perf trajectory
-stays diffable, and gates on `parity` / `ok`.
+BENCH_kernels.json. CI uploads it per PR and gates on `parity` /
+`fused_parity` / `paged_ge_dense` / `ok`.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.kernels import ops as kops
 from repro.models.lm import transformer as tf
 from repro.serve import EngineConfig, ServeEngine, poisson_workload
 
@@ -31,63 +58,143 @@ BENCH_JSON = os.path.join(C.ROOT, "BENCH_serve.json")
 
 # decode-path coverage: sliding+global attention, recurrent, xlstm
 ARCHS = ["gemma3_1b", "recurrentgemma_9b", "xlstm_13b"]
-N_SLOTS = 2
-N_REQUESTS = 6          # > slots: forces queueing + slot reuse
-MAX_LEN = 32
+# the throughput gate runs on the attention-bearing smoke arch the issue
+# names; recurrent stacks have (almost) no paged surface to win on
+GATE_ARCH = "gemma3-1b"
+N_SLOTS = 4
+N_REQUESTS = 10         # > slots: forces queueing + slot reuse
+MAX_LEN = 128           # provisioned headroom (requests stay < 16 tokens)
 BLOCK = 16
+TRIALS = 5              # interleaved measured runs per backend
+TELEMETRY_EVERY = 8     # psum-sample period (sparse: no steady-state 2x)
 
 
 def _workload(cfg, seed=0):
     return poisson_workload(
-        n_requests=N_REQUESTS, rate=0.7, vocab_size=cfg.vocab_size,
-        prompt_len=(3, 8), max_new=(3, 6), seed=seed)
+        n_requests=N_REQUESTS, rate=0.8, vocab_size=cfg.vocab_size,
+        prompt_len=(3, 8), max_new=(4, 8), seed=seed)
 
 
-def _run_engine(cfg, params, backend, telemetry_every=0):
+def _make_engine(cfg, params, backend, telemetry_every):
     eng = ServeEngine(cfg, params, EngineConfig(
         n_slots=N_SLOTS, max_len=MAX_LEN, block_size=BLOCK,
         backend=backend, record_logits=True,
         telemetry_every=telemetry_every))
     # warmup pass compiles every jitted program (prefill buckets, decode,
     # writers, stats) so the measured percentiles are serving latency,
-    # not trace/compile time; reset_metrics restarts the step clock and
-    # allocator counters so arrival pacing + the reuse gate are clean
+    # not trace/compile time
     eng.run(_workload(cfg, seed=1))
-    eng.reset_metrics()
-    summary = eng.run(_workload(cfg, seed=0))
-    return eng, summary
+    return eng
+
+
+def _measure(cfg, params):
+    """Interleaved best-of-TRIALS for both backends on one workload."""
+    engines = {
+        "paged": _make_engine(cfg, params, "paged", TELEMETRY_EVERY),
+        "dense": _make_engine(cfg, params, "dense", TELEMETRY_EVERY),
+    }
+    best = {}
+    for _ in range(TRIALS):
+        for name, eng in engines.items():
+            eng.reset_metrics()
+            summary = eng.run(_workload(cfg, seed=0))
+            if (name not in best
+                    or summary["tokens_per_s_p50"]
+                    > best[name]["tokens_per_s_p50"]):
+                best[name] = summary
+    return engines, best
+
+
+def _attn_op_bench(cfg):
+    """Fused (interpret, CPU reference) vs gather at the serve geometry:
+    wall microseconds per call + allclose parity — the recorded
+    fused-vs-gather numbers of the decode hot path."""
+    kinds = sorted(set(cfg.pattern) & {"global", "local"})
+    if not kinds:
+        return None
+    kind = kinds[0]
+    rng = np.random.RandomState(0)
+    bs, nb = BLOCK, MAX_LEN // BLOCK
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    q = jnp.asarray(rng.randn(N_SLOTS, 1, cfg.n_heads, hd), jnp.float32)
+    kp = jnp.asarray(rng.randn(N_SLOTS * nb, bs, kh, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(N_SLOTS * nb, bs, kh, hd), jnp.float32)
+    tbl = jnp.asarray(rng.permutation(N_SLOTS * nb)
+                      .reshape(N_SLOTS, nb).astype(np.int32))
+    pos = jnp.asarray(np.full(N_SLOTS, MAX_LEN - 1, np.int32))
+    kw = dict(kind=kind, window=cfg.local_window,
+              softcap=cfg.attn_logit_softcap)
+
+    outs, times = {}, {}
+    for impl in ("xla", "interpret"):
+        fn = jax.jit(lambda q, kp, vp, tbl, pos, impl=impl:
+                     kops.paged_attention(q, kp, vp, tbl, pos, impl=impl,
+                                          **kw))
+        outs[impl] = fn(q, kp, vp, tbl, pos)
+        reps, best = 100, float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                o = fn(q, kp, vp, tbl, pos)
+            jax.block_until_ready(o)
+            best = min(best, (time.perf_counter() - t0) / reps)
+        times[impl] = best * 1e6
+    maxdiff = float(jnp.max(jnp.abs(outs["interpret"] - outs["xla"])))
+    return {
+        "kind": kind,
+        "attn_us_gather": times["xla"],
+        "attn_us_fused_interpret": times["interpret"],
+        "fused_vs_gather_ratio": times["interpret"] / times["xla"],
+        "fused_parity_maxdiff": maxdiff,
+        "fused_parity": maxdiff < 1e-4,
+    }
+
+
+def _bit_parity(eng_a, eng_b):
+    if sorted(eng_a.results) != sorted(eng_b.results):
+        return False  # divergence changed which requests even finished
+    ok = True
+    for rid in eng_a.results:
+        ra, rb = eng_a.results[rid], eng_b.results[rid]
+        if ra.tokens != rb.tokens or not all(
+                np.array_equal(a, b)
+                for a, b in zip(ra.logits, rb.logits)):
+            ok = False
+    return ok
 
 
 def run() -> C.Emitter:
     em = C.Emitter("serve_bench")
-    summary = {"bench": "serve_bench", "archs": {}, "ok": True}
+    summary = {"bench": "serve_bench", "archs": {},
+               "telemetry_sample_every": TELEMETRY_EVERY,
+               "max_len": MAX_LEN, "trials": TRIALS, "ok": True}
 
     for arch in ARCHS:
         cfg = smoke_config(arch, linear_impl="cadc")
         params = tf.init(jax.random.PRNGKey(0), cfg)
 
-        eng_p, s_paged = _run_engine(cfg, params, "paged",
-                                     telemetry_every=2)
-        eng_d, s_dense = _run_engine(cfg, params, "dense")
+        engines, best = _measure(cfg, params)
+        s_paged, s_dense = best["paged"], best["dense"]
 
         # bit-parity of the paged decode path against the dense reference
-        parity = True
-        for rid in eng_p.results:
-            rp, rd = eng_p.results[rid], eng_d.results[rid]
-            if rp.tokens != rd.tokens or not all(
-                    np.array_equal(a, b)
-                    for a, b in zip(rp.logits, rd.logits)):
-                parity = False
+        # (paged_attn_impl='auto' resolves to the gather oracle on CPU —
+        # the fused kernel is parity-gated separately below)
+        parity = _bit_parity(engines["paged"], engines["dense"])
         # slot reuse: >slots requests drained; block reuse when the arch
         # has KV pools at all (pure-recurrent stacks like xlstm don't)
         reused = s_paged["requests_finished"] > N_SLOTS and all(
             b["total_allocs"] > b["pool_blocks"]
             for b in s_paged["blocks"].values())
+        ge_dense = (s_paged["tokens_per_s_p50"]
+                    >= s_dense["tokens_per_s_p50"])
+
+        attn_bench = _attn_op_bench(cfg)
 
         row = {
             "arch": cfg.name,
             "backend": "paged",
-            "tokens_per_s": s_paged["tokens_per_s"],
+            "tokens_per_s": s_paged["tokens_per_s_p50"],
+            "tokens_per_s_mean": s_paged["tokens_per_s"],
             "ttft_ms_p50": s_paged["ttft_ms_p50"],
             "ttft_ms_p99": s_paged["ttft_ms_p99"],
             "step_ms_p50": s_paged["step_ms_p50"],
@@ -95,23 +202,36 @@ def run() -> C.Emitter:
             "requests": s_paged["requests_finished"],
             "slot_reuse": reused,
             "parity_vs_dense": parity,
+            "paged_ge_dense": ge_dense,
         }
         em.emit(table="serve", **row)
         em.emit(table="serve", arch=cfg.name, backend="dense",
-                tokens_per_s=s_dense["tokens_per_s"],
+                tokens_per_s=s_dense["tokens_per_s_p50"],
                 step_ms_p50=s_dense["step_ms_p50"])
+        if attn_bench:
+            em.emit(table="paged_attn", arch=cfg.name, **attn_bench)
 
         sparsity = s_paged.get("psum_sparsity", {})
         gate_off = (float(np.mean([v["gate_off"] for v in sparsity.values()]))
                     if sparsity else None)
         summary["archs"][cfg.name] = {
             **row,
-            "dense_tokens_per_s": s_dense["tokens_per_s"],
+            "dense_tokens_per_s": s_dense["tokens_per_s_p50"],
+            "dense_tokens_per_s_mean": s_dense["tokens_per_s"],
             "blocks": s_paged["blocks"],
+            "telemetry_sample_every": s_paged["telemetry_sample_every"],
             "psum_gate_off_mean": gate_off,
             "tapped_linears": len(sparsity),
+            "paged_attn": attn_bench,
         }
         summary["ok"] &= parity and reused and row["tokens_per_s"] > 0
+        if attn_bench:
+            summary["ok"] &= attn_bench["fused_parity"]
+        if cfg.name == GATE_ARCH:
+            # the throughput acceptance: paged no longer trails dense on
+            # the attention-bearing smoke arch (dead-block skipping at
+            # provisioned headroom is paging's structural edge)
+            summary["ok"] &= ge_dense
         if sparsity:
             for label, v in list(sorted(sparsity.items()))[:4]:
                 em.emit(table="psum_sparsity", arch=cfg.name, layer=label,

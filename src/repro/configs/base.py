@@ -93,6 +93,12 @@ class ArchConfig:
     # uint32 bitmask words (8x less residual HBM than byte-bools);
     # 'recompute' saves nothing and re-derives the gate in the backward.
     kernel_save_gate: str = "auto"
+    # Paged-attention decode backend ('auto' | 'pallas' | 'interpret' |
+    # 'xla'): 'auto' runs the fused gather-free flash-decoding kernel on
+    # TPU and the gather formulation elsewhere — the gather path is
+    # bit-identical to the dense caches (the CI parity gate) and serves
+    # as the fused kernel's oracle (kernels/paged_attention.py).
+    paged_attn_impl: str = "auto"
 
     # ---- numerics / execution ----
     dtype: str = "bfloat16"
@@ -130,6 +136,12 @@ class ArchConfig:
     # max_len)); 16 divides every assigned arch's window.
     serve_slots: int = 8
     serve_block_size: int = 16
+    # psum-sparsity telemetry sample period (decode steps between taps;
+    # 0 = off). Each sample re-runs one decode step with kernel_impl='xla'
+    # (the only path that materializes psums) — steady-state steps must
+    # NOT pay that double compute, so keep this sparse. Engine/CLI default
+    # to this; EngineConfig.telemetry_every / --telemetry-every override.
+    serve_telemetry_every: int = 0
 
     # embedding/head rows padded to this multiple (TP/lane alignment —
     # Megatron-style vocab padding; logits are sliced back to vocab_size)

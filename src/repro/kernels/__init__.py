@@ -10,3 +10,7 @@
 # save_gate="recompute" mode (the backward re-derives it on the MXU).
 # ops.py is the gradient-aware dispatch; ref.py holds
 # sequential-accumulation jnp oracles (incl. the bit-exact q8 conv oracle).
+# paged_attention.py is the serve-side twin: a flash-decoding kernel that
+# consumes the paged-KV block table directly (online softmax over block
+# chunks, dead chunks pl.when-skipped), with the PR 3 gather formulation
+# kept as its oracle/fallback.

@@ -95,6 +95,11 @@ GATE_PACK_WIDTH = 32
 
 SAVE_GATE_MODES = ("auto", "packed", "bytes", "recompute")
 
+# Forward VMEM working-set budget: above this the forward re-blocks D
+# over an "arbitrary" grid axis (half of the ~16 MB/core VMEM, leaving
+# headroom for the pipeliner's double buffering).
+FWD_VMEM_BUDGET = 8 * 2**20
+
 
 def _pack_mask(gate: Array) -> Array:
     """[m, n] indicator gate -> [m, n/32] uint32, bit b of word w = gate
@@ -118,6 +123,20 @@ def _unpack_mask(words: Array) -> Array:
 # ---------------------------------------------------------------------------
 # Forward kernels: grid (M/bm, N/bn), segments looped in-body over a VMEM
 # scratch accumulator — one output write per tile.
+#
+# VMEM ceiling (ROADMAP): the 2-D grid holds full [bm, D] / [D, bn] strips
+# resident, which approaches the 16 MB budget at LM scale (D >~ 16k with
+# bm = bn = 256 fp32). When the estimated working set exceeds
+# `vmem_budget_bytes`, the forward re-blocks D at k*xbar granularity: the
+# grid grows an "arbitrary" third axis over D-chunks, each chunk keeps the
+# in-kernel segment loop over its own k segments, and the scratch
+# accumulator carries the partial sum across chunks (output still written
+# once, after the last chunk). Segment accumulation ORDER is preserved —
+# each segment still adds into the accumulator individually — so the
+# chunked forward is bit-identical to the unchunked one (and the q8 path
+# stays bit-exact vs the sequential oracle). The gate residual layout
+# ([S, M, N']) is unchanged: chunk c writes gate rows [c*k, (c+1)*k), so
+# the backward kernels never know chunking happened.
 # ---------------------------------------------------------------------------
 
 def _seg_psum(x_ref, w_ref, s: int, xbar: int) -> Array:
@@ -137,60 +156,92 @@ def _seg_psum_q8(x_ref, w_ref, scale_ref, s: int, xbar: int) -> Array:
     return psum_i32.astype(jnp.float32) * scale_ref[0, 0]
 
 
+def _acc_first(acc_ref, fps, chunked: bool):
+    """Segment 0 of a grid step: (re)initialize the accumulator on the
+    first D-chunk, add on later chunks. Unchunked grids have no chunk axis
+    — segment 0 always initializes."""
+    if not chunked:
+        acc_ref[...] = fps
+        return
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = fps
+
+    @pl.when(c > 0)
+    def _add():
+        acc_ref[...] += fps
+
+
+def _flush(o_ref, acc_ref, chunked: bool):
+    """One output write per tile — after the last D-chunk when chunked."""
+    if not chunked:
+        o_ref[...] = acc_ref[...]
+        return
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
+
+
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, fn: Callable, n_seg: int,
-            xbar: int):
+            xbar: int, chunked: bool = False):
     for s in range(n_seg):
         fps = fn(_seg_psum(x_ref, w_ref, s, xbar))
         if s == 0:
-            acc_ref[...] = fps
+            _acc_first(acc_ref, fps, chunked)
         else:
             acc_ref[...] += fps
-    o_ref[...] = acc_ref[...]
+    _flush(o_ref, acc_ref, chunked)
 
 
 def _kernel_with_gate(x_ref, w_ref, o_ref, g_ref, acc_ref, *, fn: Callable,
-                      gate_fn: Callable, n_seg: int, xbar: int, packed: bool):
+                      gate_fn: Callable, n_seg: int, xbar: int, packed: bool,
+                      chunked: bool = False):
     """VJP forward: also writes each segment's gate f'(psum) while the psum
-    tile is still in VREGs — packed to uint32 words when `packed`."""
+    tile is still in VREGs — packed to uint32 words when `packed`. The
+    gate block of a D-chunk covers exactly its own segments, so chunking
+    leaves the [S, M, N'] residual layout untouched."""
     for s in range(n_seg):
         psum = _seg_psum(x_ref, w_ref, s, xbar)
         gate = gate_fn(psum)
         g_ref[s] = _pack_mask(gate) if packed else gate.astype(g_ref.dtype)
         fps = fn(psum)
         if s == 0:
-            acc_ref[...] = fps
+            _acc_first(acc_ref, fps, chunked)
         else:
             acc_ref[...] += fps
-    o_ref[...] = acc_ref[...]
+    _flush(o_ref, acc_ref, chunked)
 
 
 def _q8_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, fn: Callable,
-               n_seg: int, xbar: int):
+               n_seg: int, xbar: int, chunked: bool = False):
     """Quantized variant: int8 activations x int8 ternary codes -> int32
     psums on the MXU, rescaled to fp32 before f(). scale_ref is (1,1)
     fp32 = (input_scale * weight_alpha)."""
     for s in range(n_seg):
         fps = fn(_seg_psum_q8(x_ref, w_ref, scale_ref, s, xbar))
         if s == 0:
-            acc_ref[...] = fps
+            _acc_first(acc_ref, fps, chunked)
         else:
             acc_ref[...] += fps
-    o_ref[...] = acc_ref[...]
+    _flush(o_ref, acc_ref, chunked)
 
 
 def _q8_kernel_with_gate(x_ref, w_ref, scale_ref, o_ref, g_ref, acc_ref, *,
                          fn: Callable, gate_fn: Callable, n_seg: int,
-                         xbar: int, packed: bool):
+                         xbar: int, packed: bool, chunked: bool = False):
     for s in range(n_seg):
         psum = _seg_psum_q8(x_ref, w_ref, scale_ref, s, xbar)
         gate = gate_fn(psum)
         g_ref[s] = _pack_mask(gate) if packed else gate.astype(g_ref.dtype)
         fps = fn(psum)
         if s == 0:
-            acc_ref[...] = fps
+            _acc_first(acc_ref, fps, chunked)
         else:
             acc_ref[...] += fps
-    o_ref[...] = acc_ref[...]
+    _flush(o_ref, acc_ref, chunked)
 
 
 # ---------------------------------------------------------------------------
@@ -343,31 +394,65 @@ def _dim_sem(n: int = 3):
     return CompilerParams(dimension_semantics=("parallel",) * (n - 1) + ("arbitrary",))
 
 
+def _auto_d_chunk(dp: int, bm: int, bn: int, itemsize: int, xbar: int,
+                  gate_bytes_per_seg: int, budget: int) -> Optional[int]:
+    """D-chunk width (a multiple of xbar dividing dp) for the forward, or
+    None to keep the whole-D strips resident. The working-set estimate per
+    grid step is the two input strips + the fp32 accumulator + the chunk's
+    gate-residual block."""
+    n_seg = dp // xbar
+    acc = bm * bn * 4
+
+    def fits(k: int) -> bool:
+        return ((bm + bn) * k * xbar * itemsize
+                + k * gate_bytes_per_seg + acc) <= budget
+
+    if fits(n_seg):
+        return None
+    best = 1  # k = 1 (one crossbar per chunk) is the floor
+    for k in range(2, n_seg):
+        if n_seg % k == 0 and fits(k):
+            best = k
+    return best * xbar
+
+
 def _fwd_pallas(xp, wp, *, f, gate_fn, gate_mode, gate_dt, xbar, bm, bn,
-                interpret, scale2=None):
+                interpret, scale2=None, d_chunk=None):
     """Run the forward on pre-padded operands. gate_mode 'packed'/'bytes'
-    adds the gate residual output; anything else runs residual-free."""
+    adds the gate residual output; anything else runs residual-free.
+    d_chunk re-blocks D over an "arbitrary" grid axis (module note above);
+    None keeps the whole-D 2-D grid."""
     mp, dp = xp.shape
     np_ = wp.shape[1]
-    n_seg = dp // xbar
-    grid = (mp // bm, np_ // bn)
+    chunked = d_chunk is not None and d_chunk < dp
+    dc = d_chunk if chunked else dp
+    n_seg = dc // xbar                     # segments per grid step
+    grid = (mp // bm, np_ // bn) + ((dp // dc,) if chunked else ())
     with_gate = gate_mode in ("packed", "bytes")
     quantized = scale2 is not None
 
-    in_specs = [
-        pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),
-        pl.BlockSpec((dp, bn), lambda i, j: (0, j)),
-    ]
+    if chunked:
+        in_specs = [
+            pl.BlockSpec((bm, dc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((dc, bn), lambda i, j, c: (c, j)),
+        ]
+    else:
+        in_specs = [
+            pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((dp, bn), lambda i, j: (0, j)),
+        ]
     operands = [xp, wp]
     if quantized:
-        in_specs.append(
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pl.ANY)
-        )
+        in_specs.append(pl.BlockSpec(
+            (1, 1), (lambda i, j, c: (0, 0)) if chunked
+            else (lambda i, j: (0, 0)), memory_space=pl.ANY))
         operands.append(scale2)
 
-    out_specs = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_specs = pl.BlockSpec(
+        (bm, bn), (lambda i, j, c: (i, j)) if chunked
+        else (lambda i, j: (i, j)))
     out_shape = jax.ShapeDtypeStruct((mp, np_), jnp.float32)
-    kw = dict(fn=f, n_seg=n_seg, xbar=xbar)
+    kw = dict(fn=f, n_seg=n_seg, xbar=xbar, chunked=chunked)
     if with_gate:
         packed = gate_mode == "packed"
         gw = bn // GATE_PACK_WIDTH if packed else bn
@@ -375,11 +460,13 @@ def _fwd_pallas(xp, wp, *, f, gate_fn, gate_mode, gate_dt, xbar, bm, bn,
         gdt = jnp.uint32 if packed else gate_dt
         out_specs = [
             out_specs,
-            pl.BlockSpec((n_seg, bm, gw), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n_seg, bm, gw),
+                         (lambda i, j, c: (c, i, j)) if chunked
+                         else (lambda i, j: (0, i, j))),
         ]
         out_shape = [
             out_shape,
-            jax.ShapeDtypeStruct((n_seg, mp, gn), gdt),
+            jax.ShapeDtypeStruct((dp // xbar, mp, gn), gdt),
         ]
         body = _q8_kernel_with_gate if quantized else _kernel_with_gate
         body = functools.partial(body, gate_fn=gate_fn, packed=packed, **kw)
@@ -395,7 +482,8 @@ def _fwd_pallas(xp, wp, *, f, gate_fn, gate_mode, gate_dt, xbar, bm, bn,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+            [: len(grid)]
         ),
         interpret=interpret,
     )(*operands)
@@ -621,9 +709,18 @@ def cadc_matmul_fwd_residuals(
     return out[:m, :n], None
 
 
+def _gate_block_bytes(gate_mode: str, gate_dt, bm: int, bn: int) -> int:
+    if gate_mode == "packed":
+        return bm * (bn // GATE_PACK_WIDTH) * 4
+    if gate_mode == "bytes":
+        return bm * bn * jnp.dtype(gate_dt).itemsize
+    return 0
+
+
 @functools.lru_cache(maxsize=None)
 def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
-                    interpret: bool, save_gate: str = "auto"):
+                    interpret: bool, save_gate: str = "auto",
+                    vmem_budget_bytes: int = FWD_VMEM_BUDGET):
     """custom_vjp op over unpadded 2-D (x, w), statics baked in (cached so
     repeated traces under jit reuse one op identity). A fn registered
     without a derivative still runs forward-only (no VJP attached)."""
@@ -634,10 +731,17 @@ def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
         n = w.shape[1]
         xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
         wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
+        d_chunk = _auto_d_chunk(
+            xp.shape[1], block_m, block_n,
+            max(jnp.dtype(x2.dtype).itemsize, jnp.dtype(w.dtype).itemsize),
+            crossbar_size,
+            _gate_block_bytes(gate_mode, gate_dt, block_m, block_n),
+            vmem_budget_bytes,
+        )
         out = _fwd_pallas(
             xp, wp, f=f, gate_fn=gate_fn, gate_mode=gate_mode,
             gate_dt=gate_dt, xbar=crossbar_size, bm=block_m, bn=block_n,
-            interpret=interpret,
+            interpret=interpret, d_chunk=d_chunk,
         )
         if gate_mode in ("packed", "bytes"):
             y, gate = out
@@ -676,7 +780,8 @@ def _diff_matmul_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
 
 @functools.lru_cache(maxsize=None)
 def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
-                       interpret: bool, save_gate: str = "auto"):
+                       interpret: bool, save_gate: str = "auto",
+                       vmem_budget_bytes: int = FWD_VMEM_BUDGET):
     """Straight-through custom_vjp over (x_q, w_codes, scale).
 
     Cotangents for the integer codes are computed as-if-fp32 (STE) and only
@@ -693,10 +798,17 @@ def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
         xp = _pad_to(_pad_to(x2, 1, crossbar_size), 0, block_m)
         wp = _pad_to(_pad_to(w, 0, crossbar_size), 1, block_n)
         scale2 = scale.reshape(1, 1).astype(jnp.float32)
+        d_chunk = _auto_d_chunk(
+            xp.shape[1], block_m, block_n,
+            max(jnp.dtype(x2.dtype).itemsize, jnp.dtype(w.dtype).itemsize),
+            crossbar_size,
+            _gate_block_bytes(gate_mode, gate_dt, block_m, block_n),
+            vmem_budget_bytes,
+        )
         out = _fwd_pallas(
             xp, wp, f=f, gate_fn=gate_fn, gate_mode=gate_mode,
             gate_dt=gate_dt, xbar=crossbar_size, bm=block_m, bn=block_n,
-            interpret=interpret, scale2=scale2,
+            interpret=interpret, scale2=scale2, d_chunk=d_chunk,
         )
         if gate_mode in ("packed", "bytes"):
             y, gate = out
@@ -747,7 +859,7 @@ def _diff_matmul_q8_op(crossbar_size: int, fn: str, block_m: int, block_n: int,
 @functools.partial(
     jax.jit,
     static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret",
-                     "save_gate"),
+                     "save_gate", "vmem_budget_bytes"),
 )
 def cadc_matmul_pallas(
     x: Array,
@@ -759,6 +871,7 @@ def cadc_matmul_pallas(
     block_n: int = 256,
     interpret: bool = False,
     save_gate: str = "auto",
+    vmem_budget_bytes: int = FWD_VMEM_BUDGET,
 ) -> Array:
     """y[M,N] = sum_s f( x[:, s*xbar:(s+1)*xbar] @ w[s*xbar:(s+1)*xbar, :] ).
 
@@ -766,14 +879,17 @@ def cadc_matmul_pallas(
     Differentiable: jax.grad flows through the custom_vjp whose backward is
     itself two segmented Pallas kernels; `save_gate` picks the gradient
     residual format — packed uint32 bitmask / byte gate / recompute-in-
-    backward (module docstring).
+    backward (module docstring). When the forward's resident strips would
+    exceed `vmem_budget_bytes`, D is auto-re-blocked at k*xbar granularity
+    over an "arbitrary" grid axis — bit-identical output (segment
+    accumulation order preserved), bounded VMEM.
     """
     *lead, d = x.shape
     n = w.shape[1]
     if w.shape[0] != d:
         raise ValueError(f"contraction mismatch {x.shape} @ {w.shape}")
     op = _diff_matmul_op(crossbar_size, fn, block_m, block_n, interpret,
-                         save_gate)
+                         save_gate, vmem_budget_bytes)
     y = op(x.reshape(-1, d), w)
     return y.reshape(*lead, n)
 
@@ -781,7 +897,7 @@ def cadc_matmul_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=("crossbar_size", "fn", "block_m", "block_n", "interpret",
-                     "save_gate"),
+                     "save_gate", "vmem_budget_bytes"),
 )
 def cadc_matmul_q8_pallas(
     x_q: Array,
@@ -794,6 +910,7 @@ def cadc_matmul_q8_pallas(
     block_n: int = 256,
     interpret: bool = False,
     save_gate: str = "auto",
+    vmem_budget_bytes: int = FWD_VMEM_BUDGET,
 ) -> Array:
     """Quantized CADC: x_q int8 [M, D], w_codes int8 {-1,0,1} [D, N],
     scale fp32 scalar (input_lsb * weight_alpha). Output fp32.
@@ -802,7 +919,7 @@ def cadc_matmul_q8_pallas(
     *lead, d = x_q.shape
     n = w_codes.shape[1]
     op = _diff_matmul_q8_op(crossbar_size, fn, block_m, block_n, interpret,
-                            save_gate)
+                            save_gate, vmem_budget_bytes)
     y = op(x_q.reshape(-1, d), w_codes, jnp.asarray(scale))
     return y.reshape(*lead, n)
 

@@ -46,8 +46,11 @@ def cadc_matmul(
     block_m: int = 256,
     block_n: int = 256,
     save_gate: str = "auto",
+    vmem_budget_bytes: int = _pk.FWD_VMEM_BUDGET,
 ) -> Array:
-    """y = sum_s f(x_s @ w_s). Output in x.dtype (xla) / fp32 (pallas)."""
+    """y = sum_s f(x_s @ w_s). Output in x.dtype (xla) / fp32 (pallas).
+    The Pallas forward auto-re-blocks D over a grid axis when its resident
+    strips would exceed `vmem_budget_bytes` (bit-identical result)."""
     mode = _resolve(impl)
     if mode == "xla":
         return _core.cadc_matmul(x, w, crossbar_size=crossbar_size, fn=fn)
@@ -60,6 +63,7 @@ def cadc_matmul(
         block_n=block_n,
         interpret=(mode == "interpret"),
         save_gate=save_gate,
+        vmem_budget_bytes=vmem_budget_bytes,
     ).astype(x.dtype)
 
 
@@ -74,6 +78,7 @@ def cadc_matmul_q8(
     block_m: int = 256,
     block_n: int = 256,
     save_gate: str = "auto",
+    vmem_budget_bytes: int = _pk.FWD_VMEM_BUDGET,
 ) -> Array:
     mode = _resolve(impl)
     if mode == "xla":
@@ -92,6 +97,45 @@ def cadc_matmul_q8(
         block_n=block_n,
         interpret=(mode == "interpret"),
         save_gate=save_gate,
+        vmem_budget_bytes=vmem_budget_bytes,
+    )
+
+
+def paged_attention(
+    q: Array,
+    k_pool: Array,
+    v_pool: Array,
+    block_table: Array,
+    positions: Array,
+    *,
+    kind: str,
+    window: int,
+    ring_len=None,
+    softcap=None,
+    impl: str = "auto",
+) -> Array:
+    """Paged-attention decode over block-table-indexed K/V pools.
+
+    q [B, Q, H, hd] (rope'd), pools [n_blocks, bs, K, hd], block_table
+    [B, nb] int32 (-1 = unallocated), positions [B]. Q >= 1 (multi-token
+    append). Same impl resolution as cadc_matmul: "pallas" / "interpret"
+    run the fused flash-decoding kernel (block table consumed directly,
+    dead chunks skipped); "xla" is the gather formulation — the PR 3
+    decode math, kept as the oracle/fallback so the CPU path stays
+    bit-identical to the dense cache layout.
+    """
+    from repro.kernels import paged_attention as _pa
+
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _pa.paged_attention_xla(
+            q, k_pool, v_pool, block_table, positions, kind=kind,
+            window=window, ring_len=ring_len, softcap=softcap,
+        )
+    return _pa.paged_attention_pallas(
+        q, k_pool, v_pool, block_table, positions, kind=kind,
+        window=window, ring_len=ring_len, softcap=softcap,
+        interpret=(mode == "interpret"),
     )
 
 

@@ -53,14 +53,23 @@ def main(argv=None):
     ap.add_argument("--prefill-via-decode", action="store_true",
                     help="token-at-a-time prefill through the decode step "
                     "(cache-consistency invariant check)")
-    ap.add_argument("--telemetry-every", type=int, default=0,
-                    help="sample per-layer CADC psum sparsity every N steps")
+    ap.add_argument("--telemetry-every", type=int, default=None,
+                    help="sample per-layer CADC psum sparsity every N decode "
+                    "steps (each sample re-runs one step with xla kernels; "
+                    "default: cfg.serve_telemetry_every, 0 = off)")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "pallas", "interpret", "xla"],
+                    help="paged-attention backend (default "
+                    "cfg.paged_attn_impl: fused flash-decoding kernel on "
+                    "TPU, gather fallback elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (smoke_config if args.smoke else get_config)(args.arch)
     if args.cadc:
         cfg = cfg.with_overrides(linear_impl="cadc")
+    if args.attn_impl is not None:
+        cfg = cfg.with_overrides(paged_attn_impl=args.attn_impl)
     if not cfg.supports_decode():
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step")
 

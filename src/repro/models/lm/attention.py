@@ -8,9 +8,13 @@ own sequence offset. Two cache layouts share the same attention math:
 
   * dense `KVCache` [B, L, K, hd] — one contiguous ring per slot;
   * paged `PagedKV` — a pool of [n_blocks, block_size, K, hd] blocks plus a
-    per-slot block table; `attention_decode_paged` gathers a slot's blocks
-    back into the dense ring layout before the (identical) masked SDPA, so
-    paged decode is bit-identical to the dense path by construction.
+    per-slot block table; `attention_decode_paged` dispatches through
+    kernels.ops.paged_attention: on TPU the fused flash-decoding kernel
+    consumes the block table directly (no ring materialization, dead
+    blocks skipped), while the "xla" fallback gathers the blocks back into
+    the ring layout before the (identical) masked SDPA — that path is
+    bit-identical to the dense caches by construction and serves as the
+    kernel's parity oracle. Q >= 1 tokens per step (multi-token append).
 
 QKV/O projections route through layers.linear_apply, i.e. they are
 CADC-partitioned when the config says so. The QK^T and AV products are
@@ -25,11 +29,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+# Single definition site for the masking value and softcap form: the paged
+# decode oracle (kernels/paged_attention.py) is bit-identical to this
+# module's SDPA only while the two agree, so this module IMPORTS them —
+# they cannot drift apart silently (kernels never import models, so the
+# kernel module is the layering-clean home).
+from repro.kernels.paged_attention import NEG_INF, _softcap
 from repro.models.lm import layers as ll
 from repro.parallel import act_sharding as sa
 
 Array = jnp.ndarray
-NEG_INF = -2.0 ** 30
 
 
 def attn_init(key, cfg: ArchConfig) -> Dict:
@@ -42,12 +51,6 @@ def attn_init(key, cfg: ArchConfig) -> Dict:
         "wv": ll.linear_init(kv, d, k_ * hd, cfg, bias=b),
         "wo": ll.linear_init(ko, h * hd, d, cfg),
     }
-
-
-def _softcap(scores: Array, cap: Optional[float]) -> Array:
-    if cap is None:
-        return scores
-    return cap * jnp.tanh(scores / cap)
 
 
 def _hshard(t: Array, cfg: ArchConfig) -> Array:
@@ -201,15 +204,18 @@ def init_paged_pool(cfg: ArchConfig, n_blocks: int, block_size: int,
 
 
 def _decode_qkv(p: Dict, x: Array, cfg: ArchConfig, position: Array):
-    """Shared one-token projections. position scalar or [B] -> pos [B]."""
-    b = x.shape[0]
+    """Shared decode projections. x [B, Q, d] (Q == 1 for the ordinary
+    step, Q > 1 for multi-token append); position scalar or [B] is the
+    BASE position — token t sits at position + t. Returns pos [B]."""
+    b, s = x.shape[0], x.shape[1]
     h, k_, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ll.linear_apply(p["wq"], x, cfg).reshape(b, 1, h, hd)
-    k_new = ll.linear_apply(p["wk"], x, cfg).reshape(b, 1, k_, hd)
-    v_new = ll.linear_apply(p["wv"], x, cfg).reshape(b, 1, k_, hd)
+    q = ll.linear_apply(p["wq"], x, cfg).reshape(b, s, h, hd)
+    k_new = ll.linear_apply(p["wk"], x, cfg).reshape(b, s, k_, hd)
+    v_new = ll.linear_apply(p["wv"], x, cfg).reshape(b, s, k_, hd)
     pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b,))
-    q = ll.rope(q, pos[:, None], cfg.rope_theta)
-    k_new = ll.rope(k_new, pos[:, None], cfg.rope_theta)
+    qpos = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q = ll.rope(q, qpos, cfg.rope_theta)
+    k_new = ll.rope(k_new, qpos, cfg.rope_theta)
     return q, k_new, v_new, pos
 
 
@@ -255,40 +261,69 @@ def attention_decode(
 
 def attention_decode_paged(
     p: Dict, x: Array, cfg: ArchConfig, *, kind: str, position: Array,
-    cache: PagedKV, block_table: Array,
+    cache: PagedKV, block_table: Array, ring_len: Optional[int] = None,
 ) -> Tuple[Array, PagedKV]:
-    """One-token decode against the paged pool. block_table [B, nb] int32
-    maps each slot's logical block index to a physical block; -1 marks an
-    unallocated block (writes to it are dropped, reads are masked).
+    """Decode against the paged pool. x [B, Q, d] with Q >= 1 (Q == 1 is
+    the ordinary serve step; Q > 1 is multi-token append — speculative-
+    decode drafts). block_table [B, nb] int32 maps each slot's logical
+    block index to a physical block; -1 marks an unallocated block (writes
+    to it are dropped, reads are masked). The table may be a COVERED-
+    PREFIX slice of the full table (the serve engine's dead-block
+    skipping); `ring_len` then carries the true ring geometry for the
+    mod/clip ring math (default: nb * block_size, the full-table case).
 
-    The slot's blocks are gathered back into the dense ring layout before
-    the same masked SDPA as `attention_decode`, so for identical cache
-    content the logits are bit-identical to the dense path: masked entries
-    score NEG_INF in both, their softmax weight underflows to exactly 0.0,
-    and 0.0 * garbage == 0.0 leaves the value sum untouched. A fused
-    gather-free paged-attention kernel is the TPU follow-up (ROADMAP)."""
-    b = x.shape[0]
-    k_, hd = cfg.n_kv_heads, cfg.head_dim
+    Q > 1 ring semantics are the `backends._ring_vals` ones (batched
+    prefill uses the same): ALL Q tokens' K/V are written first
+    (newest-wins per ring entry), then every q-token attends the final
+    ring state under its own causal/window mask. On a LOCAL ring this is
+    exactly sequential decode only while the append does not wrap the
+    ring (base position + Q <= ring_len, i.e. window + Q tokens of
+    drafting headroom): a wrapping append overwrites entries still inside
+    the earliest draft tokens' window, and those tokens then mask the
+    overwritten entries instead of seeing their old content
+    (tests/test_paged_attention.py pins both the no-wrap equality and the
+    wrap-case masking). 'global' appends are sequential-exact always.
+
+    The attention itself runs through kernels.ops.paged_attention: the
+    fused flash-decoding Pallas kernel consumes the block table directly
+    on TPU ("auto"/"pallas"; dead chunks cost zero MXU work), while the
+    "xla" fallback is the gather formulation — blocks regathered into the
+    ring layout before the same masked SDPA as `attention_decode`, which
+    keeps the paged path bit-identical to the dense path by construction
+    (the CI parity gate). cfg.paged_attn_impl selects; the fused kernel is
+    parity-gated against the gather oracle in tests/test_paged_attention.
+    """
+    from repro.kernels import ops as kops
+
+    b, q_len = x.shape[0], x.shape[1]
     q, k_new, v_new, pos = _decode_qkv(p, x, cfg, position)
 
     n_blocks, bs = cache.k.shape[0], cache.k.shape[1]
     nb = block_table.shape[1]
-    l = nb * bs
-    slot = _ring_slot(pos, l, kind)
+    if ring_len is None:
+        ring_len = nb * bs
+    if q_len > ring_len:
+        # two q-tokens would map to the SAME ring entry and the
+        # duplicate-index scatter's winner is unspecified — fail fast
+        # instead of writing a nondeterministic cache
+        raise ValueError(
+            f"multi-token append of {q_len} tokens exceeds the "
+            f"{ring_len}-entry ring: ring slots would collide")
+    # ring slots of the Q appended tokens: [B, Q] (distinct: Q <= ring_len)
+    qpos = pos[:, None] + jnp.arange(q_len, dtype=jnp.int32)[None, :]
+    slot = _ring_slot(qpos, ring_len, kind)
     blk, off = slot // bs, slot % bs
-    phys = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    phys = jnp.take_along_axis(block_table, blk, axis=1)
     # unallocated (-1) -> out-of-range sentinel, dropped by the scatter
     phys_w = jnp.where(phys >= 0, phys, n_blocks)
     k_pool = cache.k.at[phys_w, off].set(
-        k_new[:, 0].astype(cache.k.dtype), mode="drop")
+        k_new.astype(cache.k.dtype), mode="drop")
     v_pool = cache.v.at[phys_w, off].set(
-        v_new[:, 0].astype(cache.v.dtype), mode="drop")
+        v_new.astype(cache.v.dtype), mode="drop")
 
-    tbl = jnp.maximum(block_table, 0)          # garbage reads get masked
-    k_c = k_pool[tbl].reshape(b, l, k_, hd)
-    v_c = v_pool[tbl].reshape(b, l, k_, hd)
-
-    valid = _decode_mask(pos, l, kind, cfg.local_window)
-    valid &= jnp.repeat(block_table >= 0, bs, axis=1)
-    out = _sdpa(q, k_c, v_c, valid[:, None, :], cfg).reshape(b, 1, -1)
+    out = kops.paged_attention(
+        q, k_pool, v_pool, block_table, pos, kind=kind,
+        window=cfg.local_window, ring_len=ring_len,
+        softcap=cfg.attn_logit_softcap, impl=cfg.paged_attn_impl,
+    ).reshape(b, q_len, -1)
     return ll.linear_apply(p["wo"], out, cfg), PagedKV(k_pool, v_pool)

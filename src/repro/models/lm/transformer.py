@@ -128,17 +128,20 @@ def _attn_residual(p: Params, x: Array, cfg: ArchConfig, attn_fn):
 
 
 def _layer_decode(p: Params, x: Array, kind: str, cfg: ArchConfig,
-                  position: Array, cache, block_tables=None):
+                  position: Array, cache, block_tables=None,
+                  ring_lens=None):
     """block_tables None -> dense ring cache; a per-kind table dict ->
     paged pools (attention kinds only; recurrent caches are identical
-    in both layouts)."""
+    in both layouts). ring_lens carries the true per-kind ring geometry
+    when the tables are covered-prefix slices (dead-block skipping)."""
     if kind in ("global", "local"):
         if block_tables is None:
             return _attn_residual(p, x, cfg, lambda h: attn.attention_decode(
                 p["attn"], h, cfg, kind=kind, position=position, cache=cache))
         return _attn_residual(p, x, cfg, lambda h: attn.attention_decode_paged(
             p["attn"], h, cfg, kind=kind, position=position, cache=cache,
-            block_table=block_tables[kind]))
+            block_table=block_tables[kind],
+            ring_len=ring_lens[kind] if ring_lens else None))
     if kind == "mlstm":
         y, cache = xlstm_lib.mlstm_decode(p["block"], x, cfg, cache)
         return x + y, cache
@@ -302,7 +305,8 @@ def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
 
 
 def _decode_driver(params: Params, tokens: Array, position: Array, caches,
-                   cfg: ArchConfig, block_tables) -> Tuple[Array, Any]:
+                   cfg: ArchConfig, block_tables,
+                   ring_lens=None) -> Tuple[Array, Any]:
     reps, pattern, tail = _layout(cfg)
     x = ll.embed(params["embed"], tokens[:, None], cfg)
 
@@ -311,7 +315,7 @@ def _decode_driver(params: Params, tokens: Array, position: Array, caches,
         new_caches = []
         for j, kind in enumerate(pattern):
             x, c = _layer_decode(unit_params[j], x, kind, cfg, position,
-                                 unit_caches[j], block_tables)
+                                 unit_caches[j], block_tables, ring_lens)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -326,7 +330,7 @@ def _decode_driver(params: Params, tokens: Array, position: Array, caches,
     for i, kind in enumerate(tail):
         with ll.tap_scope(f"tail{i:02d}.{kind}"):
             x, c = _layer_decode(params["tail"][i], x, kind, cfg, position,
-                                 caches["tail"][i], block_tables)
+                                 caches["tail"][i], block_tables, ring_lens)
         new_tail.append(c)
 
     x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
@@ -343,13 +347,20 @@ def decode_step(params: Params, tokens: Array, position: Array, caches,
 
 
 def decode_step_paged(params: Params, tokens: Array, position: Array, caches,
-                      block_tables: Dict[str, Array], cfg: ArchConfig
+                      block_tables: Dict[str, Array], cfg: ArchConfig,
+                      ring_lens: Optional[Dict[str, int]] = None
                       ) -> Tuple[Array, Any]:
     """decode_step against paged KV pools. block_tables: one [B, nb] int32
     table per attention kind present in the pattern (shared by every layer
-    of that kind; -1 marks unallocated blocks). Bit-identical logits to
-    decode_step when the pools hold the same entries the dense ring does."""
-    return _decode_driver(params, tokens, position, caches, cfg, block_tables)
+    of that kind; -1 marks unallocated blocks). The tables may be COVERED-
+    PREFIX slices of the full tables (the serve engine drops blocks no
+    slot position can reach — dead blocks cost nothing even on the XLA
+    gather path); `ring_lens` then carries the true per-kind ring lengths.
+    On the "xla" paged_attn_impl path the logits are bit-identical to
+    decode_step when the pools hold the same entries the dense ring does;
+    the fused kernel path is allclose-parity-gated against it."""
+    return _decode_driver(params, tokens, position, caches, cfg, block_tables,
+                          ring_lens)
 
 
 # ---------------------------------------------------------------------------

@@ -270,6 +270,19 @@ def paged_cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 
 
+def block_table_specs(tables: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """Block tables [n_slots, nb] are REPLICATED on every device: the
+    fused paged-attention kernel reads the whole table row of a slot
+    through scalar prefetch to name physical blocks, and under the
+    head-parallel pool layout every shard holds all blocks (only kv-heads
+    split) — so any shard must be able to resolve any table entry. They
+    are tiny (slots x blocks int32), so replication costs nothing; this
+    helper exists so the multi-host engine constrains them explicitly
+    instead of relying on jit's default."""
+    del cfg, mesh
+    return jax.tree_util.tree_map(lambda t: P(None, None), tables)
+
+
 def to_named(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -236,10 +236,27 @@ class PagedBackend(_Backend):
         return tf.init_paged_caches(self.cfg, self.n_slots, self.block_size,
                                     self.n_blocks, self.max_len)
 
+    def covered_blocks(self, max_pos: int) -> Dict[str, int]:
+        """Per-kind count of table blocks that can hold any entry a slot
+        at position <= max_pos could have written: ring slots only ever
+        reach min(max_pos + 1, ring_len), so blocks past that prefix are
+        provably dead — the engine slices them off the device tables and
+        the decode program (fused kernel AND gather fallback) never
+        touches them. Bucketed to powers of two to bound retraces."""
+        need = max(1, max_pos + 1)
+        out = {}
+        for kind, nb in self.blocks_per_slot.items():
+            k = -(-min(need, self.ring_len[kind]) // self.block_size)
+            b = 1
+            while b < k:
+                b *= 2
+            out[kind] = min(b, nb)
+        return out
+
     def _decode_impl(self, params, caches, tables, tokens, positions):
         logits, caches = tf.decode_step_paged(
             steps_lib.cast_compute(params, self.cfg), tokens, positions,
-            caches, tables, self.cfg)
+            caches, tables, self.cfg, ring_lens=self.ring_len)
         return jnp.argmax(logits, -1).astype(jnp.int32), logits, caches
 
     def _write_impl(self, caches, contribs, slot_ids, lengths, tables):

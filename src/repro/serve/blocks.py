@@ -14,7 +14,6 @@ from __future__ import annotations
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -55,7 +54,9 @@ class BlockTables:
 
     One table per kind (not per layer): every 'local' layer shares the
     local ring geometry, every 'global' layer the global one, so one
-    logical->physical map per kind serves the whole stack."""
+    logical->physical map per kind serves the whole stack. Device uploads
+    (covered-prefix sliced + cached) live in ServeEngine._device_tables —
+    this class stays pure host state."""
 
     def __init__(self, n_slots: int, blocks_per_slot: Dict[str, int],
                  pool_blocks: Dict[str, int]):
@@ -99,9 +100,6 @@ class BlockTables:
         for kind, blocks in self._slot_blocks.pop(slot, {}).items():
             self.allocators[kind].free(blocks)
             self.tables[kind][slot, :] = -1
-
-    def device_tables(self) -> Dict[str, jnp.ndarray]:
-        return {k: jnp.asarray(v) for k, v in self.tables.items()}
 
     def stats(self) -> Dict[str, Dict[str, int]]:
         return {

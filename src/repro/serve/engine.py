@@ -66,7 +66,11 @@ class EngineConfig:
     block_size: int = 16
     backend: str = "paged"            # 'paged' | 'dense'
     prefill_mode: str = "batched"     # 'batched' | 'decode'
-    telemetry_every: int = 0          # psum-sparsity sample period (0=off)
+    # psum-sparsity sample period (decode steps between taps; 0 = off).
+    # None -> ArchConfig.serve_telemetry_every. Every sample re-runs one
+    # decode step with kernel_impl='xla' to materialize psums — keep it
+    # sparse so steady-state steps skip the double compute.
+    telemetry_every: Optional[int] = None
     record_logits: bool = False       # keep per-token logits (tests/bench)
     eos_token: Optional[int] = None
     n_blocks: Optional[Dict[str, int]] = None  # paged pool sizes (per kind)
@@ -83,6 +87,9 @@ class ServeEngine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
+        self.telemetry_every = (cfg.serve_telemetry_every
+                                if ecfg.telemetry_every is None
+                                else ecfg.telemetry_every)
         self.backend = backends_lib.make_backend(
             ecfg.backend, cfg, ecfg.n_slots, ecfg.max_len,
             ecfg.block_size, ecfg.n_blocks)
@@ -109,7 +116,7 @@ class ServeEngine:
         # _bucket padding just bounds how many shapes it ever sees
         self._prefill_fn = jax.jit(steps_lib.make_batched_prefill_step(cfg))
         self._stats_fn = None
-        self._dev_tables_cache = None
+        self._dev_tables_cache = {}
 
     # ------------------------------------------------------------------
     # submission
@@ -195,6 +202,9 @@ class ServeEngine:
                 raise RuntimeError(f"engine did not drain in {max_steps} steps")
         summary = self.telemetry.summary()
         summary["slot_uses"] = self.slot_uses.tolist()
+        # sampling rate of the psum probe (each sample doubles one decode
+        # step's compute; steady-state steps in between skip it entirely)
+        summary["telemetry_sample_every"] = self.telemetry_every
         if self.tables is not None:
             summary["blocks"] = self.tables.stats()
         return summary
@@ -225,8 +235,7 @@ class ServeEngine:
         if not any(p != IDLE for p in self.slot_phase):
             return
 
-        if (self.ecfg.telemetry_every
-                and it % self.ecfg.telemetry_every == 0):
+        if self.telemetry_every and it % self.telemetry_every == 0:
             self._sample_sparsity()
         self._decode_step()
 
@@ -250,7 +259,7 @@ class ServeEngine:
             self.slot_phase[slot] = PREFILL
             self.slot_uses[slot] += 1
             admitted.append((slot, req))
-            self._dev_tables_cache = None  # tables changed -> re-upload
+            self._dev_tables_cache = {}  # tables changed -> re-upload
         return admitted
 
     def _evict(self, slot: int) -> None:
@@ -264,7 +273,7 @@ class ServeEngine:
         self.slot_phase[slot] = IDLE
         if self.tables is not None:
             self.tables.release(slot)
-            self._dev_tables_cache = None
+            self._dev_tables_cache = {}
 
     def _maybe_finish(self, slot: int) -> None:
         req = self.slot_req[slot]
@@ -278,12 +287,25 @@ class ServeEngine:
     # prefill
     # ------------------------------------------------------------------
 
-    def _device_tables(self):
+    def _device_tables(self, covered: Optional[Dict[str, int]] = None):
+        """Device block tables, optionally sliced to the covered-prefix
+        block count per kind (dead-block skipping: blocks no slot position
+        can reach are dropped from the decode program entirely — the XLA
+        twin of the fused kernel's pl.when chunk skip). Uploads are cached
+        per prefix shape and invalidated on any table change."""
         if self.tables is None:
             return None
-        if self._dev_tables_cache is None:
-            self._dev_tables_cache = self.tables.device_tables()
-        return self._dev_tables_cache
+        key = (None if covered is None
+               else tuple(sorted(covered.items())))
+        hit = self._dev_tables_cache.get(key)
+        if hit is None:
+            hit = {
+                k: (jnp.asarray(v) if covered is None
+                    else jnp.asarray(v[:, : covered[k]]))
+                for k, v in self.tables.tables.items()
+            }
+            self._dev_tables_cache[key] = hit
+        return hit
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -357,9 +379,22 @@ class ServeEngine:
                 tokens[s] = self.slot_req[s].prompt[self.slot_pos[s]]
         positions = self.slot_pos.copy()
 
+        # dead-block skipping: the host knows every slot's position, so
+        # blocks past the covered prefix are provably unread — hand the
+        # decode program tables sliced to that prefix (bucketed; the
+        # fused kernel additionally pl.when-skips per (slot, block))
+        covered = None
+        if self.tables is not None:
+            active = [int(positions[s]) for s in range(n)
+                      if self.slot_phase[s] != IDLE]
+            covered = self.backend.covered_blocks(max(active, default=0))
+        # table upload is admission-time bookkeeping (cached until the
+        # allocator changes) — keep it out of the measured decode step
+        dev_tables = self._device_tables(covered)
+
         t0 = time.perf_counter()
         nxt, logits, self.caches = self.backend.decode(
-            self.params, self.caches, self._device_tables(),
+            self.params, self.caches, dev_tables,
             jnp.asarray(tokens), jnp.asarray(positions))
         nxt_np = np.asarray(nxt)
         logits_np = np.asarray(logits) if self.ecfg.record_logits else None
@@ -404,8 +439,12 @@ class ServeEngine:
             return
         if self._stats_fn is None:
             cfg = self.cfg
-            ucfg = cfg.with_overrides(scan_layers=False, kernel_impl="xla")
+            # psums only materialize on the XLA linears; the gather
+            # attention path keeps the probe cheap and backend-agnostic
+            ucfg = cfg.with_overrides(scan_layers=False, kernel_impl="xla",
+                                      paged_attn_impl="xla")
             paged = self.ecfg.backend == "paged"
+            ring_lens = self.backend.ring_len if paged else None
 
             def stats(params, caches, tables, tokens, positions):
                 # unstacked IN-trace (like the caches): no persistent
@@ -416,7 +455,7 @@ class ServeEngine:
                     if paged:
                         tf.decode_step_paged(
                             cast_compute(params_u, ucfg), tokens, positions,
-                            caches_u, tables, ucfg)
+                            caches_u, tables, ucfg, ring_lens=ring_lens)
                     else:
                         tf.decode_step(
                             cast_compute(params_u, ucfg), tokens, positions,

@@ -151,3 +151,82 @@ class TestKernelProperties:
         )
         want = ref.cadc_matmul_ref(x, w, crossbar_size=xbar, fn="relu")
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestDChunkedForward:
+    """Forward VMEM ceiling (ROADMAP): under a tight vmem_budget_bytes the
+    forward re-blocks D at k*xbar granularity over an "arbitrary" grid
+    axis. Segment accumulation order is preserved, so the chunked forward
+    must be BIT-identical to the unchunked one — outputs, gradients in
+    every save_gate mode, and the q8 path vs its sequential oracle."""
+
+    M, D, N, XBAR = 48, 512, 72, 64          # 8 segments
+    BM, BN = 32, 64
+    TIGHT = 60_000                            # forces multi-chunk blocking
+
+    def test_auto_selection(self):
+        # whole-D fits the default budget -> unchunked
+        assert pk._auto_d_chunk(self.D, self.BM, self.BN, 4, self.XBAR, 0,
+                                pk.FWD_VMEM_BUDGET) is None
+        # tight budget -> a proper divisor of the segment count, > 1 chunk
+        dc = pk._auto_d_chunk(self.D, self.BM, self.BN, 4, self.XBAR, 0,
+                              self.TIGHT)
+        assert dc is not None and dc % self.XBAR == 0 and self.D % dc == 0
+        assert dc < self.D
+        # even a one-crossbar chunk over budget still degrades gracefully
+        assert pk._auto_d_chunk(self.D, self.BM, self.BN, 4, self.XBAR, 0,
+                                1) == self.XBAR
+
+    def test_forward_bit_identical(self):
+        x, w = rand((self.M, self.D), k=1), rand((self.D, self.N), k=2)
+        kw = dict(crossbar_size=self.XBAR, fn="relu", block_m=self.BM,
+                  block_n=self.BN, interpret=True)
+        full = pk.cadc_matmul_pallas(x, w, **kw)
+        chunk = pk.cadc_matmul_pallas(x, w, vmem_budget_bytes=self.TIGHT,
+                                      **kw)
+        assert np.array_equal(np.asarray(full), np.asarray(chunk))
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=self.XBAR, fn="relu")
+        np.testing.assert_allclose(chunk, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("save_gate", ["packed", "bytes", "recompute"])
+    @pytest.mark.parametrize("fn", ["relu", "tanh"])
+    def test_grads_bit_identical(self, save_gate, fn):
+        if save_gate == "packed" and fn == "tanh":
+            pytest.skip("tanh gate is not an indicator — packed invalid")
+        x, w = rand((self.M, self.D), k=3), rand((self.D, self.N), k=4)
+
+        def loss(budget):
+            def f(x, w):
+                return jnp.sum(pk.cadc_matmul_pallas(
+                    x, w, crossbar_size=self.XBAR, fn=fn, block_m=self.BM,
+                    block_n=self.BN, interpret=True, save_gate=save_gate,
+                    vmem_budget_bytes=budget) ** 2)
+            return jax.grad(f, argnums=(0, 1))(x, w)
+
+        gf = loss(pk.FWD_VMEM_BUDGET)
+        gc = loss(self.TIGHT)
+        assert np.array_equal(np.asarray(gf[0]), np.asarray(gc[0]))
+        assert np.array_equal(np.asarray(gf[1]), np.asarray(gc[1]))
+
+    def test_q8_stays_bit_exact_vs_oracle(self):
+        rng = np.random.RandomState(0)
+        xq = jnp.asarray(rng.randint(-127, 128, (self.M, self.D)), jnp.int8)
+        wc = jnp.asarray(rng.randint(-1, 2, (self.D, self.N)), jnp.int8)
+        sc = jnp.float32(0.013)
+        kw = dict(crossbar_size=self.XBAR, fn="relu", block_m=self.BM,
+                  block_n=self.BN, interpret=True)
+        full = pk.cadc_matmul_q8_pallas(xq, wc, sc, **kw)
+        chunk = pk.cadc_matmul_q8_pallas(xq, wc, sc,
+                                         vmem_budget_bytes=self.TIGHT, **kw)
+        want = ref.cadc_matmul_q8_ref(xq, wc, sc, crossbar_size=self.XBAR,
+                                      fn="relu")
+        assert np.array_equal(np.asarray(full), np.asarray(chunk))
+        assert np.array_equal(np.asarray(chunk), np.asarray(want))
+
+    def test_ops_dispatch_passes_budget(self):
+        x, w = rand((16, 256), k=5), rand((256, 16), k=6)
+        got = ops.cadc_matmul(x, w, crossbar_size=64, impl="interpret",
+                              block_m=16, block_n=16,
+                              vmem_budget_bytes=self.TIGHT)
+        want = ref.cadc_matmul_ref(x, w, crossbar_size=64, fn="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
