@@ -5,8 +5,11 @@ Runs the repro.serve engine on smoke-size archs with CADC linears
 more requests than slots, so admission queueing, eviction and slot/block
 reuse are all on the measured path. Reports tokens/s, TTFT and p50/p99
 step latency per (arch, backend), the paged-vs-dense bit-parity verdict,
-the fused-vs-gather paged-attention numbers, and the per-layer CADC
-psum-sparsity telemetry (sampled every TELEMETRY_EVERY steps — each
+the fused-vs-gather paged-attention numbers, the SPECULATIVE section
+(draft/verify over the multi-token paged append: acceptance rate,
+tokens/slot/step, speculative vs baseline tokens/s, and the CI-gated
+bit-parity of speculative vs plain greedy streams), and the per-layer
+CADC psum-sparsity telemetry (sampled every TELEMETRY_EVERY steps — each
 sample re-runs one decode step with xla kernels, so steady-state steps
 must not pay it; the rate is reported alongside the numbers).
 
@@ -67,6 +70,8 @@ MAX_LEN = 128           # provisioned headroom (requests stay < 16 tokens)
 BLOCK = 16
 TRIALS = 5              # interleaved measured runs per backend
 TELEMETRY_EVERY = 8     # psum-sample period (sparse: no steady-state 2x)
+SPEC_TOKENS = 3         # drafts/slot/step in the speculative section
+SPEC_DRAFT = "ngram"    # prompt-lookup proposer (model-free)
 
 
 def _workload(cfg, seed=0):
@@ -150,6 +155,39 @@ def _attn_op_bench(cfg):
     }
 
 
+def _spec_bench(cfg, params, baseline_eng):
+    """Speculative draft/verify vs the plain paged engine on the same
+    workload: the CI-gated verdict is BIT-IDENTICAL committed token
+    streams (greedy-exact speculation — acceptance only buys speed),
+    plus the acceptance-rate / tokens-per-step telemetry and the
+    speculative-vs-baseline throughput."""
+    eng = ServeEngine(cfg, params, EngineConfig(
+        n_slots=N_SLOTS, max_len=MAX_LEN, block_size=BLOCK,
+        backend="paged", record_logits=True, telemetry_every=0,
+        spec_tokens=SPEC_TOKENS, spec_draft=SPEC_DRAFT))
+    eng.run(_workload(cfg, seed=1))       # warmup: compile spec programs
+    eng.reset_metrics()
+    summary = eng.run(_workload(cfg, seed=0))
+
+    # compare by submission order: rids keep incrementing across the
+    # baseline engine's repeated measured runs, but each run's sorted
+    # rids map 1:1 onto the workload order
+    a, b = sorted(eng.results), sorted(baseline_eng.results)
+    parity = len(a) == len(b) and all(
+        eng.results[ra].tokens == baseline_eng.results[rb].tokens
+        for ra, rb in zip(a, b))
+    sp = summary["speculative"]
+    return {
+        "spec_tokens": SPEC_TOKENS,
+        "draft": SPEC_DRAFT,
+        "parity": parity,
+        "accept_rate": sp["accept_rate"],
+        "tokens_per_step": sp["tokens_per_step"],
+        "tokens_per_s": summary["tokens_per_s_p50"],
+        "verify_steps": sp["steps"],
+    }
+
+
 def _bit_parity(eng_a, eng_b):
     if sorted(eng_a.results) != sorted(eng_b.results):
         return False  # divergence changed which requests even finished
@@ -189,6 +227,7 @@ def run() -> C.Emitter:
                     >= s_dense["tokens_per_s_p50"])
 
         attn_bench = _attn_op_bench(cfg)
+        spec_bench = _spec_bench(cfg, params, engines["paged"])
 
         row = {
             "arch": cfg.name,
@@ -210,6 +249,9 @@ def run() -> C.Emitter:
                 step_ms_p50=s_dense["step_ms_p50"])
         if attn_bench:
             em.emit(table="paged_attn", arch=cfg.name, **attn_bench)
+        em.emit(table="speculative", arch=cfg.name,
+                tokens_per_s_base=s_paged["tokens_per_s_p50"],
+                **spec_bench)
 
         sparsity = s_paged.get("psum_sparsity", {})
         gate_off = (float(np.mean([v["gate_off"] for v in sparsity.values()]))
@@ -223,8 +265,12 @@ def run() -> C.Emitter:
             "psum_gate_off_mean": gate_off,
             "tapped_linears": len(sparsity),
             "paged_attn": attn_bench,
+            "speculative": spec_bench,
         }
         summary["ok"] &= parity and reused and row["tokens_per_s"] > 0
+        # speculative greedy decode must stay bit-identical to plain
+        # greedy decode on every decode-capable smoke arch (CI gate)
+        summary["ok"] &= spec_bench["parity"]
         if attn_bench:
             summary["ok"] &= attn_bench["fused_parity"]
         if cfg.name == GATE_ARCH:

@@ -16,6 +16,19 @@ oracle for the fused kernels.
 `save_gate` selects the gradient-residual format of the Pallas paths
 ("auto" | "packed" | "bytes" | "recompute" — see kernels/cadc_matmul.py);
 the XLA path ignores it (XLA autodiff rematerializes its own residuals).
+
+Invariants the dispatch preserves (docs/kernels.md):
+  * q8 ops are BIT-exact across impls — every path accumulates segments
+    sequentially in the oracle's order, so "interpret"/"pallas" vs "xla"
+    is numerics-transparent, not merely allclose.
+  * paged_attention's "xla" path is the gather oracle: bit-identical to
+    the dense ring caches by construction (the serve CI parity gate),
+    while the fused kernel skips dead/garbage blocks so they contribute
+    EXACTLY 0 (never "0 * garbage" — NaN-proof) and is parity-gated
+    against the oracle. Q >= 1 multi-token appends (speculative drafts)
+    follow the ring-wrap semantics pinned in attention_decode_paged.
+  * float kernels auto-re-block D under their VMEM budget with unchanged
+    accumulation order — chunked == unchunked bitwise.
 """
 from __future__ import annotations
 

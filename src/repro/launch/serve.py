@@ -12,6 +12,10 @@ builds the caches through the decode step itself and thereby checks the
 cache-consistency invariant end to end. --backend picks the paged
 (block-table KV pools) or dense (per-slot rings) cache layout — the two
 are bit-identical on the decode path (tests/test_serve_engine.py).
+--spec-tokens K turns decode iterations into draft/verify steps (K drafts
+per slot scored in one multi-token paged append; --draft picks the
+proposer) without changing the committed token streams — greedy-exact
+speculative decoding (tests/test_speculative.py).
 
 Multi-host note: the engine runs single-process today; the sharding rules
 for the paged pools exist (sharding.paged_cache_specs — kv-heads over
@@ -62,6 +66,14 @@ def main(argv=None):
                     help="paged-attention backend (default "
                     "cfg.paged_attn_impl: fused flash-decoding kernel on "
                     "TPU, gather fallback elsewhere)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decoding: K draft tokens verified "
+                    "per slot per step in one multi-token paged append "
+                    "(0 = off; committed streams stay bit-identical to "
+                    "plain greedy decode)")
+    ap.add_argument("--draft", choices=["ngram", "model"], default="ngram",
+                    help="draft proposer for --spec-tokens: prompt-lookup "
+                    "n-gram (model-free) or a shrunk-config draft model")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -88,6 +100,8 @@ def main(argv=None):
         backend=args.backend,
         prefill_mode="decode" if args.prefill_via_decode else "batched",
         telemetry_every=args.telemetry_every,
+        spec_tokens=args.spec_tokens,
+        spec_draft=args.draft,
     ))
     workload = poisson_workload(
         n_requests=n_requests, rate=args.rate, vocab_size=cfg.vocab_size,
@@ -106,6 +120,13 @@ def main(argv=None):
     print(f"  step ms p50/p99 = {summary['step_ms_p50']:.1f}/"
           f"{summary['step_ms_p99']:.1f}  TTFT ms p50/p99 = "
           f"{summary['ttft_ms_p50']:.1f}/{summary['ttft_ms_p99']:.1f}")
+    if "speculative" in summary:
+        sp = summary["speculative"]
+        print(f"  speculative (K={args.spec_tokens}, draft={args.draft}): "
+              f"accept rate {sp['accept_rate']:.2f}, "
+              f"{sp['tokens_per_step']:.2f} tokens/slot/step "
+              f"({sp['accepted']}/{sp['drafted']} drafts over "
+              f"{sp['steps']} steps)")
     if "blocks" in summary:
         print(f"  blocks: {json.dumps(summary['blocks'])}")
     if "psum_sparsity" in summary:

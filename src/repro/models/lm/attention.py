@@ -183,11 +183,22 @@ class PagedKV(NamedTuple):
     v: Array
 
 
-def cache_len(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+def cache_len(cfg: ArchConfig, kind: str, seq_len: int, *,
+              headroom: int = 0) -> int:
     """Logical per-slot cache length for an attention layer kind. The
     single source of the ring geometry — both the dense caches and the
-    paged block math derive from it (bit-parity depends on agreement)."""
-    return min(cfg.local_window, seq_len) if kind == "local" else seq_len
+    paged block math derive from it (bit-parity depends on agreement).
+
+    `headroom` buys multi-token appends (speculative-decode drafts of
+    Q = headroom + 1 tokens) sequential-exact semantics on local rings: a
+    Q-token append is bitwise the sequential decode only while no write
+    lands inside an earlier q-token's window, which needs
+    ring_len >= window + Q - 1 (see attention_decode_paged). Entries past
+    the window are mask-invalid either way, so a headroomed ring changes
+    capacity, never attention output."""
+    if kind == "local":
+        return min(cfg.local_window + headroom, seq_len)
+    return seq_len
 
 
 def init_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int,

@@ -127,13 +127,46 @@ def _attn_residual(p: Params, x: Array, cfg: ArchConfig, attn_fn):
     return x, extra
 
 
+def _recurrent_decode_multi(p: Params, x: Array, kind: str, cfg: ArchConfig,
+                            position: Array, cache):
+    """Multi-token append for the recurrent cells (speculative-decode
+    drafts on the hybrid stacks): scan the SAME one-token decode cell over
+    the Q tokens — each step sees exactly the [B, 1, d] shapes of ordinary
+    decode, so the outputs are bitwise identical to Q sequential steps —
+    and keep EVERY per-token state. Unlike KV rings (where a rejected
+    draft's entries are overwritten by the next append before anything
+    reads them), recurrent state folds each token in irreversibly, so
+    verification must roll back to the state of the last ACCEPTED token:
+    the returned states carry a leading per-token axis [Q, ...] and the
+    caller (backends.PagedBackend) selects index `accepted` per slot."""
+    ys, states = [], []
+    state = cache
+    for t in range(x.shape[1]):  # static Q, small — unrolled on purpose:
+        # a lax.scan body is compiled once and may fuse differently from
+        # the single-token step the bit-parity gate compares against
+        y, state = _layer_decode(p, x[:, t : t + 1], kind, cfg, position,
+                                 state)
+        ys.append(y[:, 0])
+        states.append(state)
+    stacked = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves, axis=0), *states)
+    return jnp.stack(ys, axis=1), stacked
+
+
 def _layer_decode(p: Params, x: Array, kind: str, cfg: ArchConfig,
                   position: Array, cache, block_tables=None,
                   ring_lens=None):
     """block_tables None -> dense ring cache; a per-kind table dict ->
     paged pools (attention kinds only; recurrent caches are identical
     in both layouts). ring_lens carries the true per-kind ring geometry
-    when the tables are covered-prefix slices (dead-block skipping)."""
+    when the tables are covered-prefix slices (dead-block skipping).
+
+    x [B, Q, d] with Q > 1 is the multi-token (speculative verify) step:
+    attention kinds batch all Q tokens through one paged append; recurrent
+    kinds scan the one-token cell and return per-token states stacked
+    [Q, ...] (see _recurrent_decode_multi)."""
+    if kind not in ("global", "local") and x.shape[1] > 1:
+        return _recurrent_decode_multi(p, x, kind, cfg, position, cache)
     if kind in ("global", "local"):
         if block_tables is None:
             return _attn_residual(p, x, cfg, lambda h: attn.attention_decode(
@@ -307,8 +340,12 @@ def init_caches(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
 def _decode_driver(params: Params, tokens: Array, position: Array, caches,
                    cfg: ArchConfig, block_tables,
                    ring_lens=None) -> Tuple[Array, Any]:
+    """tokens [B] -> (logits [B, V], caches); tokens [B, Q] (multi-token
+    append) -> (logits [B, Q, V], caches with recurrent-layer states
+    stacked per token)."""
     reps, pattern, tail = _layout(cfg)
-    x = ll.embed(params["embed"], tokens[:, None], cfg)
+    multi = tokens.ndim == 2
+    x = ll.embed(params["embed"], tokens if multi else tokens[:, None], cfg)
 
     def unit_body(x, scanned):
         unit_params, unit_caches = scanned
@@ -335,7 +372,8 @@ def _decode_driver(params: Params, tokens: Array, position: Array, caches,
 
     x = ll.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = ll.lm_head(params.get("head"), params["embed"], x, cfg)
-    return logits[:, 0], {"units": new_unit_caches, "tail": tuple(new_tail)}
+    return (logits if multi else logits[:, 0]), {
+        "units": new_unit_caches, "tail": tuple(new_tail)}
 
 
 def decode_step(params: Params, tokens: Array, position: Array, caches,
@@ -359,6 +397,41 @@ def decode_step_paged(params: Params, tokens: Array, position: Array, caches,
     On the "xla" paged_attn_impl path the logits are bit-identical to
     decode_step when the pools hold the same entries the dense ring does;
     the fused kernel path is allclose-parity-gated against it."""
+    return _decode_driver(params, tokens, position, caches, cfg, block_tables,
+                          ring_lens)
+
+
+def decode_step_spec(params: Params, tokens: Array, position: Array, caches,
+                     block_tables: Dict[str, Array], cfg: ArchConfig,
+                     ring_lens: Optional[Dict[str, int]] = None
+                     ) -> Tuple[Array, Any]:
+    """Speculative verify step: score Q tokens per slot in ONE forward.
+
+    tokens [B, Q] int32 — column 0 is the last committed token, columns
+    1..Q-1 the draft proposals; position [B] is the base position of
+    column 0 (token t sits at position + t). Returns (logits [B, Q, V],
+    caches): logits[:, t] is conditioned on the prefix ending at token t,
+    so argmax(logits[:, t]) is the token greedy decode would emit after
+    accepting tokens 0..t — the verification signal.
+
+    Cache semantics under partial acceptance:
+      * attention (paged KV): all Q tokens' K/V are written (the multi-
+        token append of attention_decode_paged). Rejected-draft entries
+        need NO rollback — the next append's base advances by the commit
+        count c >= 1 and spans [base+c, base+c+Q-1] ⊇ the stale region
+        [base+c, base+Q-1], so every stale entry is rewritten before any
+        q-token can attend it (appends write first, attend second). The
+        bit-exactness of this path additionally needs ring headroom on
+        local layers — see attention_decode_paged / cache_len(headroom=).
+      * recurrent layers: state folds tokens in irreversibly, so the
+        returned caches carry per-token states stacked [Q, ...]; the
+        caller must select the accepted token's state (and MUST NOT feed
+        these stacked caches back into a Q == 1 step unselected).
+    """
+    if tokens.ndim != 2 or tokens.shape[1] < 2:
+        raise ValueError(
+            f"decode_step_spec wants tokens [B, Q >= 2]; got "
+            f"{tokens.shape} (use decode_step_paged for single tokens)")
     return _decode_driver(params, tokens, position, caches, cfg, block_tables,
                           ring_lens)
 

@@ -13,22 +13,34 @@ The subsystem the ROADMAP's serving story grows from:
                            ring caches) share the same engine; paged
                            decode is bit-identical to dense by
                            construction (tests/test_serve_engine.py).
-  * telemetry            — tokens/s, TTFT, p50/p99 step latency, and the
+  * telemetry            — tokens/s, TTFT, p50/p99 step latency, the
                            paper's psum-sparsity signal tapped live from
-                           the decode path.
+                           the decode path, and speculative acceptance /
+                           tokens-per-step counters.
+  * speculative          — draft proposers (prompt-lookup n-gram, shrunk
+                           draft model) for the engine's draft/verify
+                           loop: K drafts verified in ONE multi-token
+                           decode_step_spec call, committed streams
+                           bit-identical to plain greedy decode.
   * workload             — Poisson-style synthetic arrival streams.
 """
 from repro.serve.blocks import BlockAllocator, BlockTables
 from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.speculative import (DraftModelProposer, NgramProposer,
+                                     Proposer, make_proposer)
 from repro.serve.telemetry import Telemetry
 from repro.serve.workload import poisson_workload
 
 __all__ = [
     "BlockAllocator",
     "BlockTables",
+    "DraftModelProposer",
     "EngineConfig",
+    "NgramProposer",
+    "Proposer",
     "Request",
     "ServeEngine",
     "Telemetry",
+    "make_proposer",
     "poisson_workload",
 ]

@@ -7,6 +7,19 @@ Both backends expose the same four jitted programs —
     reset_slots(caches, slot_mask) -> caches
     init_caches() -> caches
 
+— and the paged backend built with spec_tokens=K adds the speculative
+draft/verify program
+
+    decode_spec(params, caches, tables, tokens [B, K+1], positions)
+        -> (greedy [B, K+1], logits, keep [B], caches)
+
+which scores K drafts + the committed token in one multi-token append,
+computes the accepted-prefix length in-trace, and rolls recurrent-layer
+states back to the last kept token (KV entries of rejected drafts need
+no rollback — the next append rewrites them before any read). Rings get
+window+K (local) / max_len+K (global) headroom so drafts stay in the
+sequential-exact append regime (attention.cache_len).
+
 `DenseBackend` keeps the classic per-slot ring caches ([n_slots, L, K, hd]);
 `PagedBackend` scatters each ring over block-table-indexed pools. The two
 are bit-identical on the decode path by construction: the paged writer
@@ -209,17 +222,44 @@ class PagedBackend(_Backend):
     name = "paged"
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_len: int,
-                 block_size: int, n_blocks: Optional[Dict[str, int]] = None):
+                 block_size: int, n_blocks: Optional[Dict[str, int]] = None,
+                 spec_tokens: int = 0):
         kinds = [k for k in ("global", "local")
                  if k in set(cfg.pattern_for_layers)]
         self.block_size = block_size
-        self.ring_len = {k: attn.cache_len(cfg, k, max_len) for k in kinds}
-        for k, l in self.ring_len.items():
-            if l % block_size != 0:
-                raise ValueError(
-                    f"block_size={block_size} must divide the {k!r} ring "
-                    f"length {l} (max_len={max_len}, "
-                    f"local_window={cfg.local_window})")
+        self.spec_tokens = spec_tokens
+        if spec_tokens:
+            # Speculative drafting appends Q = spec_tokens + 1 tokens per
+            # step, which needs ring headroom for sequential-exactness:
+            #   * local rings get window + spec_tokens entries so no write
+            #     can land inside an earlier draft token's window
+            #     (attention_decode_paged's no-wrap condition);
+            #   * global rings must hold positions up to
+            #     max_len - 1 + spec_tokens (the last step for a slot may
+            #     draft past its final committed token) — otherwise the
+            #     clip at ring_len - 1 would scatter two draft tokens to
+            #     ONE entry, an unspecified-winner collision.
+            # Rounded up to block granularity; the extra entries are
+            # mask-invalid, so they change capacity, never output.
+            # min(window + K, max_len + K) == min(window, max_len) + K and
+            # rounding only grows the ring, so the headroom bound holds by
+            # construction for every (window, max_len, K) — the only
+            # runtime fail-fast left is attention_decode_paged's
+            # q_len > ring_len collision guard.
+            alloc = max_len + spec_tokens
+            self.ring_len = {
+                k: -(-attn.cache_len(cfg, k, alloc, headroom=spec_tokens)
+                     // block_size) * block_size
+                for k in kinds}
+        else:
+            self.ring_len = {k: attn.cache_len(cfg, k, max_len)
+                             for k in kinds}
+            for k, l in self.ring_len.items():
+                if l % block_size != 0:
+                    raise ValueError(
+                        f"block_size={block_size} must divide the {k!r} ring "
+                        f"length {l} (max_len={max_len}, "
+                        f"local_window={cfg.local_window})")
         self.blocks_per_slot = {k: l // block_size
                                 for k, l in self.ring_len.items()}
         self.n_blocks = dict(n_blocks) if n_blocks else {
@@ -231,6 +271,9 @@ class PagedBackend(_Backend):
                     f"even one slot ({nb} blocks/slot) — no request could "
                     f"ever be admitted")
         super().__init__(cfg, n_slots, max_len)
+        if spec_tokens:
+            self._decode_spec = jax.jit(self._decode_spec_impl,
+                                        donate_argnums=(1,))
 
     def init_caches(self):
         return tf.init_paged_caches(self.cfg, self.n_slots, self.block_size,
@@ -258,6 +301,53 @@ class PagedBackend(_Backend):
             steps_lib.cast_compute(params, self.cfg), tokens, positions,
             caches, tables, self.cfg, ring_lens=self.ring_len)
         return jnp.argmax(logits, -1).astype(jnp.int32), logits, caches
+
+    # -- speculative draft/verify ---------------------------------------
+    def decode_spec(self, params, caches, tables, tokens, positions):
+        """One draft/verify step. tokens [B, Q]: column 0 = last committed
+        token, 1..Q-1 = drafts. Returns (greedy [B, Q], logits [B, Q, V],
+        keep [B], caches): greedy[:, t] is the token greedy decode emits
+        after accepting tokens 0..t; keep in 1..Q is how many input tokens
+        stand (1 committed + accepted drafts) — the engine commits
+        greedy[:, :keep] and advances positions by keep. Recurrent-layer
+        states are already rolled back to the keep'th token in-trace; KV
+        entries of rejected drafts need no rollback (the next append
+        rewrites them before any read — decode_step_spec docstring)."""
+        if not self.spec_tokens:
+            raise ValueError("backend built without spec_tokens")
+        return self._decode_spec(params, caches, tables, tokens, positions)
+
+    def _decode_spec_impl(self, params, caches, tables, tokens, positions):
+        logits, caches = tf.decode_step_spec(
+            steps_lib.cast_compute(params, self.cfg), tokens, positions,
+            caches, tables, self.cfg, ring_lens=self.ring_len)
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)       # [B, Q]
+        # longest matching prefix: draft t (= tokens[:, t+1]) is accepted
+        # iff every draft before it was AND it equals the target's greedy
+        # continuation greedy[:, t]
+        match = (tokens[:, 1:] == greedy[:, :-1]).astype(jnp.int32)
+        keep = 1 + jnp.cumprod(match, axis=1).sum(axis=1).astype(jnp.int32)
+        caches = self._select_spec_states(caches, keep)
+        return greedy, logits, keep, caches
+
+    def _select_spec_states(self, caches, keep):
+        """Roll recurrent-layer states back to the last kept token: the
+        spec driver stacks them per token ([Q, ...]; [reps, Q, ...] in
+        scanned units) and this picks index keep - 1 per slot. Attention
+        pools pass through untouched (their stale entries self-heal)."""
+        km1 = keep - 1
+        rows = jnp.arange(keep.shape[0])
+
+        def one(kind, stacked, cache, _):
+            if kind in ("global", "local"):
+                return cache
+
+            def sel(leaf):
+                return leaf[:, km1, rows] if stacked else leaf[km1, rows]
+
+            return jax.tree_util.tree_map(sel, cache)
+
+        return map_layer_caches(caches, None, self.cfg, one)
 
     def _write_impl(self, caches, contribs, slot_ids, lengths, tables):
         bs = self.block_size
@@ -293,9 +383,15 @@ class PagedBackend(_Backend):
 
 def make_backend(name: str, cfg: ArchConfig, n_slots: int, max_len: int,
                  block_size: int,
-                 n_blocks: Optional[Dict[str, int]] = None) -> _Backend:
+                 n_blocks: Optional[Dict[str, int]] = None,
+                 spec_tokens: int = 0) -> _Backend:
     if name == "dense":
+        if spec_tokens:
+            raise ValueError(
+                "speculative decoding needs the paged backend (the dense "
+                "ring writer is single-token)")
         return DenseBackend(cfg, n_slots, max_len)
     if name == "paged":
-        return PagedBackend(cfg, n_slots, max_len, block_size, n_blocks)
+        return PagedBackend(cfg, n_slots, max_len, block_size, n_blocks,
+                            spec_tokens)
     raise ValueError(f"unknown cache backend {name!r}")

@@ -19,6 +19,19 @@ Prefill modes:
     feeds its next prompt token through the ordinary decode step. Slower,
     but preserves the cache-consistency invariant exactly (decode-built
     caches), which the parity tests anchor on.
+
+Speculative decoding (EngineConfig.spec_tokens = K > 0): decode
+iterations become draft/verify steps — a proposer (serve.speculative)
+offers K tokens per slot, the target scores all K+1 positions in ONE
+multi-token decode_step_spec call, and greedy verification commits the
+longest draft prefix matching the target's own continuations plus the
+bonus token. Slots advance by their own acceptance count (variable-
+advance position vectors, 1..K+1 per step). THE invariant, gated in
+BENCH_serve.json and tests/test_speculative.py: committed token streams
+are bit-identical to spec_tokens=0 greedy decode for ANY proposer —
+acceptance only moves throughput. Requires the paged backend (rings get
+window+K / max_len+K draft headroom) and batched prefill. docs/serving.md
+documents the lifecycle, the ring-wrap semantics and the telemetry.
 """
 from __future__ import annotations
 
@@ -41,6 +54,47 @@ from repro.serve.blocks import BlockTables
 from repro.serve.telemetry import Telemetry
 
 IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def make_prefill_batch(cfg: ArchConfig, n_slots: int, admitted):
+    """Assemble the padded prefill inputs for an admission wave:
+    (batch dict, lengths [n_slots], slot_ids [n_slots]) with sentinel
+    rows (id == n_slots) for padding — the cache writers drop them.
+    Prompt lengths are bucketed to powers of two so jit's shape cache
+    stays bounded. Shared by the engine and the draft-model proposer:
+    the draft's cache frontier mirrors the target's only while the two
+    prefill layouts stay identical, so there is exactly ONE builder."""
+    s_pad = _bucket(max(r.prompt.size for _, r in admitted))
+    if cfg.frontend == "vit":
+        s_pad = max(s_pad, _bucket(cfg.frontend_len))
+    tokens = np.zeros((n_slots, s_pad), np.int32)
+    lengths = np.zeros(n_slots, np.int32)
+    slot_ids = np.full(n_slots, n_slots, np.int32)
+    for i, (slot, req) in enumerate(admitted):
+        tokens[i, : req.prompt.size] = req.prompt
+        lengths[i] = req.prompt.size
+        slot_ids[i] = slot
+    batch = {"tokens": jnp.asarray(tokens)}
+    if cfg.frontend == "vit":
+        # _embed_inputs overlays these onto the FIRST frontend_len prompt
+        # positions (the model's VLM layout: those positions ARE the
+        # image). Requests without patches get zeros — note that prompts
+        # shorter than frontend_len are then fully covered by the (zero)
+        # image prefix, as in training.
+        patches = np.zeros((n_slots, cfg.frontend_len, cfg.frontend_dim),
+                           np.float32)
+        for i, (_, req) in enumerate(admitted):
+            if req.patches is not None:
+                patches[i] = req.patches
+        batch["patches"] = jnp.asarray(patches)
+    return batch, jnp.asarray(lengths), jnp.asarray(slot_ids)
 
 
 @dataclasses.dataclass
@@ -74,6 +128,15 @@ class EngineConfig:
     record_logits: bool = False       # keep per-token logits (tests/bench)
     eos_token: Optional[int] = None
     n_blocks: Optional[Dict[str, int]] = None  # paged pool sizes (per kind)
+    # Speculative decoding: K > 0 turns each decode iteration into a
+    # draft/verify step — a proposer offers K tokens per slot, the target
+    # scores all K+1 positions in ONE multi-token decode_step_spec call,
+    # and the longest draft prefix matching the target's own greedy
+    # continuations is committed (plus the bonus token). Greedy-exact:
+    # committed streams are bit-identical to spec_tokens=0 for ANY
+    # proposer (CI-gated). Paged backend + batched prefill only.
+    spec_tokens: int = 0
+    spec_draft: str = "ngram"         # 'ngram' | 'model' (serve.speculative)
 
 
 class ServeEngine:
@@ -84,6 +147,10 @@ class ServeEngine:
             raise ValueError(f"bad prefill_mode {ecfg.prefill_mode!r}")
         if cfg.frontend == "vit" and ecfg.prefill_mode == "decode":
             raise ValueError("vit-frontend archs need prefill_mode='batched'")
+        if ecfg.spec_tokens and ecfg.prefill_mode != "batched":
+            # decode-mode prefill would interleave prompt tokens with
+            # drafts inside one multi-token append
+            raise ValueError("speculative decoding needs batched prefill")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -92,7 +159,13 @@ class ServeEngine:
                                 else ecfg.telemetry_every)
         self.backend = backends_lib.make_backend(
             ecfg.backend, cfg, ecfg.n_slots, ecfg.max_len,
-            ecfg.block_size, ecfg.n_blocks)
+            ecfg.block_size, ecfg.n_blocks, ecfg.spec_tokens)
+        self.proposer = None
+        if ecfg.spec_tokens:
+            from repro.serve import speculative as spec_lib
+            self.proposer = spec_lib.make_proposer(
+                ecfg.spec_draft, ecfg.spec_tokens, cfg, ecfg.n_slots,
+                ecfg.max_len)
         self.caches = self.backend.init_caches()
         self.tables: Optional[BlockTables] = None
         if ecfg.backend == "paged":
@@ -231,13 +304,18 @@ class ServeEngine:
                                                    jnp.asarray(mask))
             if self.ecfg.prefill_mode == "batched":
                 self._batched_prefill(admitted)
+            if self.proposer is not None:
+                self.proposer.on_admit(admitted)
 
         if not any(p != IDLE for p in self.slot_phase):
             return
 
         if self.telemetry_every and it % self.telemetry_every == 0:
             self._sample_sparsity()
-        self._decode_step()
+        if self.ecfg.spec_tokens:
+            self._spec_decode_step()
+        else:
+            self._decode_step()
 
     # ------------------------------------------------------------------
     # admission / eviction
@@ -307,45 +385,14 @@ class ServeEngine:
             self._dev_tables_cache[key] = hit
         return hit
 
-    @staticmethod
-    def _bucket(n: int) -> int:
-        b = 8
-        while b < n:
-            b *= 2
-        return b
-
     def _batched_prefill(self, admitted: List[Tuple[int, Request]]) -> None:
-        cfg, n = self.cfg, self.ecfg.n_slots
-        s_pad = self._bucket(max(len(r.prompt) for _, r in admitted))
-        if cfg.frontend == "vit":
-            s_pad = max(s_pad, self._bucket(cfg.frontend_len))
-        tokens = np.zeros((n, s_pad), np.int32)
-        lengths = np.zeros(n, np.int32)
-        slot_ids = np.full(n, n, np.int32)  # sentinel rows -> dropped
-        for i, (slot, req) in enumerate(admitted):
-            tokens[i, : req.prompt.size] = req.prompt
-            lengths[i] = req.prompt.size
-            slot_ids[i] = slot
-        batch = {"tokens": jnp.asarray(tokens)}
-        if cfg.frontend == "vit":
-            # _embed_inputs overlays these onto the FIRST frontend_len
-            # prompt positions (the model's VLM layout: those positions
-            # are the image). Requests without patches get zeros — note
-            # that prompts shorter than frontend_len are then fully
-            # covered by the (zero) image prefix, as in training.
-            patches = np.zeros((n, cfg.frontend_len, cfg.frontend_dim),
-                               np.float32)
-            for i, (_, req) in enumerate(admitted):
-                if req.patches is not None:
-                    patches[i] = req.patches
-            batch["patches"] = jnp.asarray(patches)
+        batch, lengths, slot_ids = make_prefill_batch(
+            self.cfg, self.ecfg.n_slots, admitted)
 
         t0 = time.perf_counter()
-        first, last, contribs = self._prefill_fn(
-            self.params, batch, jnp.asarray(lengths))
+        first, last, contribs = self._prefill_fn(self.params, batch, lengths)
         self.caches = self.backend.write_prefill(
-            self.caches, contribs, jnp.asarray(slot_ids),
-            jnp.asarray(lengths), self._device_tables())
+            self.caches, contribs, slot_ids, lengths, self._device_tables())
         first_np = np.asarray(first)
         last_np = np.asarray(last) if self.ecfg.record_logits else None
         self.telemetry.record_prefill(time.perf_counter() - t0)
@@ -429,6 +476,91 @@ class ServeEngine:
                     emitted += 1
                     self._maybe_finish(s)
         self.telemetry.record_step(dt, emitted)
+
+    # ------------------------------------------------------------------
+    # speculative decode (draft / verify)
+    # ------------------------------------------------------------------
+
+    def _spec_decode_step(self) -> None:
+        """One draft/verify iteration: K proposer drafts per active slot,
+        ONE multi-token decode_step_spec over all K+1 positions, commit
+        the longest draft prefix matching the target's greedy
+        continuations + the bonus token. Every slot advances by its own
+        acceptance count (variable-advance position vectors); commits are
+        capped at max_new / truncated at eos, so a slot can finish — and
+        be evicted — mid-draft with rejected-draft state left behind
+        (harmless: KV self-heals, recurrent rows reset at admission)."""
+        n, k = self.ecfg.n_slots, self.ecfg.spec_tokens
+        active = np.array([p == DECODE for p in self.slot_phase])
+        histories: List[Optional[np.ndarray]] = [None] * n
+        for s in range(n):
+            if active[s]:
+                req = self.slot_req[s]
+                histories[s] = np.concatenate(
+                    [req.prompt, np.asarray(req.tokens, np.int32)])
+        # drafting is PART of the measured step — a draft-model proposer
+        # pays K extra decode steps here and the spec-vs-baseline
+        # throughput comparison must charge for them (dt accumulates
+        # propose + verify + frontier-advance below)
+        t0 = time.perf_counter()
+        drafts = self.proposer.propose(active, histories)
+        dt = time.perf_counter() - t0
+
+        tokens = np.zeros((n, k + 1), np.int32)
+        for s in range(n):
+            if active[s]:
+                tokens[s, 0] = self.slot_last[s]
+                tokens[s, 1:] = drafts[s]
+        positions = self.slot_pos.copy()
+
+        covered = None
+        if self.tables is not None:
+            # the append writes (and its q-tokens may attend) up to
+            # position base + k — cover the drafts, not just the base
+            act_pos = [int(positions[s]) for s in range(n) if active[s]]
+            covered = self.backend.covered_blocks(
+                max(act_pos, default=0) + k)
+        dev_tables = self._device_tables(covered)
+
+        t0 = time.perf_counter()
+        greedy, logits, keep, self.caches = self.backend.decode_spec(
+            self.params, self.caches, dev_tables,
+            jnp.asarray(tokens), jnp.asarray(positions))
+        greedy_np = np.asarray(greedy)
+        keep_np = np.asarray(keep)
+        logits_np = np.asarray(logits) if self.ecfg.record_logits else None
+        dt += time.perf_counter() - t0
+
+        emitted = accepted = 0
+        committed: List[Optional[np.ndarray]] = [None] * n
+        for s in range(n):
+            if not active[s]:
+                continue
+            req = self.slot_req[s]
+            accepted += int(keep_np[s]) - 1
+            c = min(int(keep_np[s]), req.max_new - len(req.tokens))
+            toks = greedy_np[s, :c]
+            if self.ecfg.eos_token is not None:
+                hits = np.flatnonzero(toks == self.ecfg.eos_token)
+                if hits.size:
+                    c = int(hits[0]) + 1
+                    toks = toks[:c]
+            committed[s] = toks
+            req.tokens.extend(int(t) for t in toks)
+            if logits_np is not None:
+                req.logits.extend(logits_np[s, i] for i in range(c))
+            self.slot_last[s] = int(toks[-1])
+            self.slot_pos[s] += c
+            emitted += c
+        t0 = time.perf_counter()
+        self.proposer.on_commit(committed)
+        dt += time.perf_counter() - t0
+        n_active = int(active.sum())
+        self.telemetry.record_step(dt, emitted)
+        self.telemetry.record_spec(n_active * k, accepted, emitted, n_active)
+        for s in range(n):
+            if active[s]:
+                self._maybe_finish(s)
 
     # ------------------------------------------------------------------
     # telemetry probe

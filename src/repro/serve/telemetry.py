@@ -45,6 +45,12 @@ class Telemetry:
         self.decode_tokens = 0
         self.decode_wall = 0.0
         self.sparsity: Dict[str, List[Dict[str, float]]] = {}
+        # speculative decode counters (record_spec; all zero when off)
+        self.spec_steps = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_committed = 0
+        self.spec_slot_steps = 0  # sum of active-slot counts over steps
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -62,6 +68,18 @@ class Telemetry:
 
     def record_prefill(self, dt: float) -> None:
         self.prefill_s.append(dt)
+
+    def record_spec(self, drafted: int, accepted: int, committed: int,
+                    n_active: int) -> None:
+        """One draft/verify step: `drafted` draft tokens proposed across
+        the `n_active` decoding slots, `accepted` of them verified
+        (longest matching prefix), `committed` tokens actually emitted
+        (accepted + bonus tokens, after max_new/eos caps)."""
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_committed += committed
+        self.spec_slot_steps += n_active
 
     def record_sparsity(self, per_layer: Dict[str, Dict[str, Any]]) -> None:
         for label, rec in per_layer.items():
@@ -94,6 +112,18 @@ class Telemetry:
             "prefill_ms_p50": _pct(self.prefill_s, 50) * 1e3,
             "wall_s": time.perf_counter() - self._t0,
         }
+        if self.spec_steps:
+            out["speculative"] = {
+                "steps": self.spec_steps,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "accept_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
+                # committed tokens per slot per verify step — the
+                # amortization win (1.0 == plain decode; up to K + 1)
+                "tokens_per_step": (self.spec_committed
+                                    / max(self.spec_slot_steps, 1)),
+            }
         if self.sparsity:
             out["psum_sparsity"] = {
                 label: {
